@@ -1,0 +1,41 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+ARTIFACTS.mkdir(exist_ok=True)
+
+
+def run_rcp(grouped, layout, scenes, n_frames, caching=True, net=None,
+            scheduler=None, replication=1, seed=0):
+    from repro.pipelines.rcp.app import Layout, RCPApp
+    from repro.pipelines.rcp.data import make_scene
+    from repro.runtime.scheduler import RandomScheduler
+    lay = Layout(*layout, replication=replication)
+    kw = {"net": net} if net is not None else {}
+    app = RCPApp([make_scene(s, n_frames) for s in scenes], lay,
+                 grouped=grouped,
+                 scheduler=scheduler if scheduler is not None
+                 else (None if grouped else RandomScheduler(seed)),
+                 caching=caching, seed=seed, **kw)
+    app.stream()
+    t0 = time.perf_counter()
+    app.run()
+    wall = time.perf_counter() - t0
+    s = app.summary(warmup=min(100, n_frames // 3))
+    s["sim_wall_s"] = wall
+    return s
+
+
+def emit(rows):
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    for name, us, derived in rows:
+        d = ";".join(f"{k}={v}" for k, v in derived.items())
+        print(f"{name},{us:.1f},{d}")

@@ -1,0 +1,23 @@
+"""Paper Fig. 3: E2E latency, one client (gates3), layouts x placement."""
+from .common import emit, run_rcp
+
+LAYOUTS = [(1, 1, 1), (1, 3, 3), (3, 3, 3), (3, 5, 5)]
+
+
+def run(quick=True):
+    frames = 200 if quick else 700
+    rows = []
+    for layout in LAYOUTS:
+        for grouped in (True, False):
+            s = run_rcp(grouped, layout, ["gates3"], frames)
+            name = f"fig3/{'/'.join(map(str, layout))}/" \
+                   f"{'affinity' if grouped else 'random'}"
+            rows.append((name, s["median"] * 1e6,
+                         {"p75_ms": round(s["p75"] * 1e3, 1),
+                          "p95_ms": round(s["p95"] * 1e3, 1),
+                          "remote_gets": s["remote_gets"]}))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

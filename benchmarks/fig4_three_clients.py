@@ -1,0 +1,25 @@
+"""Paper Fig. 4: E2E latency, three simultaneous clients."""
+from .common import emit, run_rcp
+
+LAYOUTS = [(1, 3, 3), (3, 3, 3), (3, 5, 5)]
+SCENES = ("little3", "hyang5", "gates3")
+
+
+def run(quick=True):
+    frames = 150 if quick else 700
+    rows = []
+    for layout in LAYOUTS:
+        for grouped in (True, False):
+            s = run_rcp(grouped, layout, SCENES, frames)
+            name = f"fig4/{'/'.join(map(str, layout))}/" \
+                   f"{'affinity' if grouped else 'random'}"
+            rows.append((name, s["median"] * 1e6,
+                         {"p75_ms": round(s["p75"] * 1e3, 1),
+                          "p95_ms": round(s["p95"] * 1e3, 1),
+                          "remote_gets": s["remote_gets"],
+                          "bytes_remote": s["bytes_remote"]}))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,25 @@
+"""Paper Fig. 5: caching disabled, 3 clients, 3/5/5 — random collapses,
+affinity is unaffected (every get is shard-local)."""
+from .common import emit, run_rcp
+
+SCENES = ("little3", "hyang5", "gates3")
+
+
+def run(quick=True):
+    frames = 150 if quick else 700
+    rows = []
+    for grouped in (True, False):
+        for caching in (True, False):
+            s = run_rcp(grouped, (3, 5, 5), SCENES, frames, caching=caching)
+            name = f"fig5/{'affinity' if grouped else 'random'}/" \
+                   f"{'cache' if caching else 'nocache'}"
+            rows.append((name, s["median"] * 1e6,
+                         {"p95_ms": round(s["p95"] * 1e3, 1),
+                          "remote_gets": s["remote_gets"],
+                          "bytes_remote_MB":
+                              round(s["bytes_remote"] / 1e6, 1)}))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

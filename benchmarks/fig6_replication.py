@@ -1,0 +1,26 @@
+"""Paper Fig. 6: replication (nodes per shard) vs affinity+many-shards."""
+from .common import emit, run_rcp
+
+SCENES = ("little3", "hyang5", "gates3")
+
+
+def run(quick=True):
+    frames = 150 if quick else 700
+    cases = [
+        ("3/5/5_r1_affinity", True, (3, 5, 5), 1),
+        ("3/5/5_r1_random", False, (3, 5, 5), 1),
+        ("1/1/1_r3", True, (1, 1, 1), 3),
+        ("1/3/3_r2_affinity", True, (1, 3, 3), 2),
+        ("1/3/3_r2_random", False, (1, 3, 3), 2),
+    ]
+    rows = []
+    for name, grouped, layout, repl in cases:
+        s = run_rcp(grouped, layout, SCENES, frames, replication=repl)
+        rows.append((f"fig6/{name}", s["median"] * 1e6,
+                     {"p95_ms": round(s["p95"] * 1e3, 1),
+                      "remote_gets": s["remote_gets"]}))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,74 @@
+"""§Roofline: per-(arch x shape) three-term roofline from dry-run artifacts.
+
+compute  = HLO_FLOPs_per_device / 197 TFLOP/s
+memory   = kernel-fused HBM model / 819 GB/s   (XLA-unfused shown alongside)
+collective = HLO collective bytes per device / (4 x 50 GB/s ICI links)
+
+Reads benchmarks/artifacts/dryrun/*.json produced by repro.launch.dryrun.
+"""
+import json
+from pathlib import Path
+
+from .common import ARTIFACTS, emit
+
+DRYRUN = ARTIFACTS / "dryrun"
+
+
+def load_cells(mesh="single", rules="baseline"):
+    cells = []
+    for f in sorted(DRYRUN.glob(f"*__{mesh}__{rules}.json")):
+        d = json.loads(f.read_text())
+        if not d.get("skip"):
+            cells.append(d)
+    return cells
+
+
+def recompute(d):
+    """Roofline with the kernel-fused memory model (see roofline_model)."""
+    from repro import configs
+    from repro.configs.shapes import SHAPES
+    from repro.launch import mesh as meshlib
+    from repro.launch.roofline_model import tpu_memory_model
+
+    cfg = configs.get_config(d["arch"])
+    shape = SHAPES[d["shape"]]
+    mem = tpu_memory_model(cfg, shape)
+    t_comp = d["flops_per_device"] / meshlib.PEAK_FLOPS_BF16
+    t_mem = mem["total"] / meshlib.HBM_BW
+    t_coll = d["collective_bytes_per_device"] / (
+        4 * meshlib.ICI_BW_PER_LINK)
+    peak = max(t_comp, t_mem, t_coll)
+    return {
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "memory_s_xla_unfused": d["roofline"]["memory_s"],
+        "dominant": max((t_comp, "compute"), (t_mem, "memory"),
+                        (t_coll, "collective"))[1],
+        "roofline_fraction": (t_comp / peak) if peak > 0 else None,
+        "mem_terms": mem,
+    }
+
+
+def run(quick=True, rules="baseline"):
+    rows = []
+    for d in load_cells(rules=rules):
+        r = recompute(d)
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append((
+            f"roofline/{d['arch']}/{d['shape']}/{rules}",
+            step_s * 1e6,
+            {
+                "compute_s": round(r["compute_s"], 4),
+                "memory_s": round(r["memory_s"], 4),
+                "collective_s": round(r["collective_s"], 4),
+                "dominant": r["dominant"],
+                "frac": round(r["roofline_fraction"], 4),
+                "useful_flops": round(d.get("useful_flop_ratio") or 0, 3),
+                "mem_xla_s": round(r["memory_s_xla_unfused"], 2),
+            }))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

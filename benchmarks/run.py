@@ -1,0 +1,49 @@
+"""Benchmark runner — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3,...]``
+prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+"""
+import argparse
+import sys
+import time
+
+from . import (azure_mode, fig3_single_client, fig4_three_clients,
+               fig5_no_caching, fig6_replication, micro_affinity,
+               roofline, serving_affinity)
+from .common import emit
+
+SUITES = {
+    "fig3": fig3_single_client,
+    "fig4": fig4_three_clients,
+    "fig5": fig5_no_caching,
+    "fig6": fig6_replication,
+    "azure": azure_mode,
+    "micro": micro_affinity,
+    "serving": serving_affinity,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale workloads (700 frames etc.)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(SUITES))
+    print("name,us_per_call,derived")
+    for name in names:
+        mod = SUITES[name]
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run(quick=not args.full)
+        except Exception as e:   # noqa: BLE001 — keep the suite going
+            print(f"{name}/ERROR,0,{e!r}", file=sys.stderr)
+            continue
+        emit(rows)
+        print(f"# {name}: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Insert the generated roofline table into EXPERIMENTS.md and refresh the
+per-cell §Perf iteration numbers from the artifacts."""
+import io
+import json
+import re
+import sys
+from contextlib import redirect_stdout
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+DRY = ROOT / "benchmarks" / "artifacts" / "dryrun"
+
+
+def table_md():
+    from scripts.gen_tables import roofline_table
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        roofline_table("baseline")
+    return buf.getvalue()
+
+
+def cell(arch, shape, rules):
+    f = DRY / f"{arch}__{shape}__single__{rules}.json"
+    if not f.exists():
+        return None
+    from benchmarks.roofline import recompute
+    d = json.loads(f.read_text())
+    return d, recompute(d)
+
+
+def main():
+    exp = (ROOT / "EXPERIMENTS.md").read_text()
+    exp = exp.replace("<!-- ROOFLINE_TABLE -->", table_md())
+
+    # llama4 decode it2
+    got = cell("llama4-maverick-400b-a17b", "decode_32k", "opt_moedec")
+    if got:
+        d, r = got
+        verdict = (f"**confirmed**: coll bytes/dev "
+                   f"{d['collective_bytes_per_device']:.2e} -> coll_s "
+                   f"{r['collective_s']:.3f}; dominant: {r['dominant']}"
+                   if r["collective_s"] < 0.9 else
+                   f"**refuted**: coll_s {r['collective_s']:.3f} "
+                   f"(GSPMD still gathers; shard_map dispatch is the next "
+                   f"step)")
+        exp = exp.replace(
+            "| 2 | pin the dispatched tensors' CONTRACTED dims over `data` "
+            "to match the weights' FSDP layout — then the cheap thing "
+            "(moving (E,C,f) activations, ~5 MB/layer) is the only legal "
+            "plan | `opt_moedec` v2 (contracted-dim constraints in "
+            "`models/moe.py`) | — | — | <!-- LLAMA4_IT2 -->",
+            "| 2 | pin the dispatched tensors' CONTRACTED dims over `data` "
+            "to match the weights' FSDP layout — then the cheap thing "
+            "(moving (E,C,f) activations, ~5 MB/layer) is the only legal "
+            "plan | `opt_moedec` v2 (contracted-dim constraints in "
+            f"`models/moe.py`) | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.3f} | {verdict}")
+
+    # dsv2 it4 / it5
+    for rules, tag in (("opt_dsv2", "<!-- DSV2_IT4 -->"),
+                       ("opt_moetrain", "<!-- DSV2_IT5 -->")):
+        got = cell("deepseek-v2-236b", "train_4k", rules)
+        if got:
+            d, r = got
+            exp = exp.replace(
+                f"| — | — | {tag}",
+                f"| {r['compute_s']:.1f} | {r['collective_s']:.1f} | "
+                f"flops/dev {d['flops_per_device']:.2e}, coll "
+                f"{d['collective_bytes_per_device']:.2e} |")
+
+    (ROOT / "EXPERIMENTS.md").write_text(exp)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Generate the EXPERIMENTS.md tables from dry-run artifacts."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+DRY = Path(__file__).resolve().parents[1] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def fmt(x, nd=3):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if abs(x) >= 1000 or abs(x) < 0.01:
+        return f"{x:.2e}"
+    return f"{x:.{nd}f}"
+
+
+def roofline_table(rules="baseline"):
+    from benchmarks.roofline import load_cells, recompute
+    from repro import configs
+    print("| arch | shape | compute s | memory s | coll s | dominant | "
+          "roofline frac | useful flops | fits 16GB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    seen = set()
+    for d in load_cells(rules=rules):
+        r = recompute(d)
+        args = (d["memory"].get("argument_size_in_bytes") or 0)
+        fits = "yes" if args < 16 * 2 ** 30 else f"NO ({args/2**30:.0f}GB)"
+        print(f"| {d['arch']} | {d['shape']} | {fmt(r['compute_s'])} | "
+              f"{fmt(r['memory_s'])} | {fmt(r['collective_s'])} | "
+              f"{r['dominant']} | {fmt(r['roofline_fraction'])} | "
+              f"{fmt(d.get('useful_flop_ratio'))} | {fits} |")
+        seen.add((d["arch"], d["shape"]))
+    for arch, shape, skip in configs.cells():
+        if skip and (arch, shape) not in seen:
+            print(f"| {arch} | {shape} | - | - | - | skipped | - | - | "
+                  f"{skip} |")
+            seen.add((arch, shape))
+
+
+def dryrun_table(mesh):
+    print("| arch | shape | compile s | args GB | temps GB | "
+          "flops/dev | coll B/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for f in sorted(DRY.glob(f"*__{mesh}__baseline.json")):
+        d = json.loads(f.read_text())
+        if d.get("skip"):
+            continue
+        m = d["memory"]
+        print(f"| {d['arch']} | {d['shape']} | {d['compile_s']} | "
+              f"{(m.get('argument_size_in_bytes') or 0)/2**30:.1f} | "
+              f"{(m.get('temp_size_in_bytes') or 0)/2**30:.1f} | "
+              f"{fmt(d['flops_per_device'])} | "
+              f"{fmt(d['collective_bytes_per_device'])} |")
+
+
+def perf_cells():
+    from benchmarks.roofline import recompute
+    rows = {}
+    for f in sorted(DRY.glob("*__single__*.json")):
+        d = json.loads(f.read_text())
+        if d.get("skip"):
+            continue
+        key = (d["arch"], d["shape"])
+        rows.setdefault(key, {})[d["rules"]] = recompute(d)
+    for (arch, shape), by_rules in sorted(rows.items()):
+        if len(by_rules) < 2:
+            continue
+        print(f"\n### {arch} x {shape}")
+        print("| ruleset | compute s | memory s | coll s | dominant | frac |")
+        print("|---|---|---|---|---|---|")
+        for rules, r in sorted(by_rules.items()):
+            print(f"| {rules} | {fmt(r['compute_s'])} | {fmt(r['memory_s'])}"
+                  f" | {fmt(r['collective_s'])} | {r['dominant']} | "
+                  f"{fmt(r['roofline_fraction'])} |")
+
+
+if __name__ == "__main__":
+    what = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    if what == "roofline":
+        roofline_table(sys.argv[2] if len(sys.argv) > 2 else "baseline")
+    elif what == "dryrun":
+        dryrun_table(sys.argv[2] if len(sys.argv) > 2 else "single")
+    elif what == "perf":
+        perf_cells()

@@ -1,0 +1,71 @@
+"""Architecture registry: the 10 assigned archs + the paper's RCP pipeline.
+
+``get_config(name)`` returns the full published config; ``get_smoke(name)``
+returns the reduced same-family config used by CPU smoke tests.  Shapes live
+in ``shapes.py``; ``cells()`` enumerates the (arch x shape) dry-run grid with
+skip annotations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.models.common import ModelConfig
+from .shapes import SHAPES, ShapeConfig
+
+_MODULES = {
+    "granite-3-2b": "granite_3_2b",
+    "deepseek-7b": "deepseek_7b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "hubert-xlarge": "hubert_xlarge",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "mamba2-780m": "mamba2_780m",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def _module(name: str):
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+# ---------------------------------------------------------------------------
+# (arch x shape) grid with skip rules
+# ---------------------------------------------------------------------------
+
+SUBQUADRATIC = {"recurrentgemma-9b", "mamba2-780m"}
+ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    if arch in ENCODER_ONLY and shape in ("decode_32k", "long_500k"):
+        return "encoder-only: no autoregressive decode step"
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return "pure full-attention arch: 500k decode requires sub-quadratic attention (see DESIGN.md)"
+    return None
+
+
+def cells() -> List[Tuple[str, str, Optional[str]]]:
+    """All 40 (arch, shape, skip_reason) cells."""
+    out = []
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            out.append((arch, shape, skip_reason(arch, shape)))
+    return out
+
+
+def runnable_cells() -> List[Tuple[str, str]]:
+    return [(a, s) for a, s, skip in cells() if skip is None]

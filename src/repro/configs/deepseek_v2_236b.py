@@ -1,0 +1,58 @@
+"""deepseek-v2-236b [moe] — MLA (kv_lora=512), 2 shared + 160 routed top-6.
+[arXiv:2405.04434; hf]
+
+Deviation from the HF config: every layer is MoE (the real model's first
+layer is a dense MLP) so the layer stack stays homogeneous for
+scan-over-layers; parameter/flop impact is <0.2%.
+"""
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=1536,
+    vocab_size=102400,
+    mlp_variant="swiglu",
+    n_experts=160,
+    n_shared_experts=2,
+    moe_top_k=6,
+    moe_d_ff=1536,
+    moe_chunk=4096,
+    mla=True,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    rope_theta=10000.0,
+    opt_state_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-v2-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=64,
+    vocab_size=256,
+    mlp_variant="swiglu",
+    n_experts=8,
+    n_shared_experts=2,
+    moe_top_k=2,
+    moe_d_ff=64,
+    moe_chunk=64,
+    mla=True,
+    kv_lora_rank=32,
+    q_lora_rank=48,
+    qk_nope_dim=16,
+    qk_rope_dim=8,
+    v_head_dim=16,
+)

@@ -1,0 +1,38 @@
+"""hubert-xlarge [audio] — encoder-only, w2v2 arch. [arXiv:2106.07447]
+
+Modality frontend is a STUB: ``input_specs()`` supplies precomputed conv
+frame features (B, S, 512) which the model projects into d_model.
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="encoder",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    head_dim=80,
+    mlp_variant="gelu",
+    is_causal=False,
+    frontend="audio",
+    frontend_dim=512,
+)
+
+SMOKE = ModelConfig(
+    name="hubert-xlarge-smoke",
+    family="encoder",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=32,
+    head_dim=16,
+    mlp_variant="gelu",
+    is_causal=False,
+    frontend="audio",
+    frontend_dim=24,
+)

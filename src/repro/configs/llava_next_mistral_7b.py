@@ -1,0 +1,41 @@
+"""llava-next-mistral-7b [vlm] — mistral-7b backbone, anyres tiling.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]
+
+The vision tower is a STUB: ``input_specs()`` supplies precomputed patch
+embeddings (B, n_patches, 1024) which replace the first n_patches token
+positions (early fusion).
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    head_dim=128,
+    mlp_variant="swiglu",
+    rope_theta=1000000.0,
+    frontend="vision",
+    frontend_dim=1024,
+    n_patches=576,
+)
+
+SMOKE = ModelConfig(
+    name="llava-next-smoke",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    head_dim=16,
+    mlp_variant="swiglu",
+    frontend="vision",
+    frontend_dim=24,
+    n_patches=4,
+)

@@ -1,0 +1,23 @@
+"""The paper's primary contribution: the affinity grouping mechanism."""
+from .affinity import (AffinityFunction, AffinityKey, CallableAffinity,
+                       Descriptor, InstrumentedAffinity, NoAffinity,
+                       RegexAffinity, affinity_key_for)
+from .placement import (HashPlacement, PlacementEngine, PlacementPolicy,
+                        RendezvousPlacement, stable_hash)
+from .object_store import CascadeStore, ObjectPool, ObjectRecord, Shard, UDL
+from .client import ServiceClientAPI, VOLATILE, PERSISTENT
+from .prefetch import PrefetchEngine, PrefetchPlan
+from .consistency import AtomicGroupUpdate, GroupSequencer
+from .groups import GroupRegistry, MigrationPlan
+
+__all__ = [
+    "AffinityFunction", "AffinityKey", "CallableAffinity", "Descriptor",
+    "InstrumentedAffinity", "NoAffinity", "RegexAffinity", "affinity_key_for",
+    "HashPlacement", "PlacementEngine", "PlacementPolicy",
+    "RendezvousPlacement", "stable_hash",
+    "CascadeStore", "ObjectPool", "ObjectRecord", "Shard", "UDL",
+    "ServiceClientAPI", "VOLATILE", "PERSISTENT",
+    "PrefetchEngine", "PrefetchPlan",
+    "AtomicGroupUpdate", "GroupSequencer",
+    "GroupRegistry", "MigrationPlan",
+]

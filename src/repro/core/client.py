@@ -1,0 +1,49 @@
+"""Developer-facing client API mirroring the paper's Listing 1.
+
+    capi = ServiceClientAPI(store)
+    capi.create_object_pool("/grouping", subgroup_type, 0,
+                            affinity_set_regex="_[0-9]+")
+    capi.put("/grouping/example_1", None)   # affinity key '_1'
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+from .object_store import CascadeStore, ObjectPool
+
+VOLATILE = "VolatileCascadeStoreWithStringKey"
+PERSISTENT = "PersistentCascadeStoreWithStringKey"
+
+
+class ServiceClientAPI:
+    def __init__(self, store: CascadeStore,
+                 default_nodes: Optional[Sequence[str]] = None):
+        self._store = store
+        self._default_nodes = list(default_nodes or store.nodes)
+
+    def create_object_pool(self, prefix: str,
+                           subgroup_type: str = VOLATILE,
+                           subgroup_index: int = 0,
+                           affinity_set_regex: Optional[str] = None,
+                           n_shards: Optional[int] = None,
+                           nodes: Optional[Sequence[str]] = None,
+                           replication: int = 1) -> ObjectPool:
+        del subgroup_type, subgroup_index   # accepted for API fidelity
+        nodes = list(nodes or self._default_nodes)
+        n_shards = n_shards or max(len(nodes) // replication, 1)
+        return self._store.create_object_pool(
+            prefix, nodes, n_shards, replication=replication,
+            affinity_set_regex=affinity_set_regex)
+
+    def put(self, key: str, value: Any = None, **meta):
+        return self._store.put(key, value, **meta)
+
+    def get(self, key: str, node: Optional[str] = None):
+        rec, _local = self._store.get(key, node=node)
+        return None if rec is None else rec.value
+
+    def trigger(self, key: str, value: Any = None, **meta):
+        return self._store.trigger(key, value, **meta)
+
+    def get_affinity_key(self, key: str) -> str:
+        return self._store.affinity_of(key)

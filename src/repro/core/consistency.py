@@ -1,0 +1,77 @@
+"""Per-affinity-group ordering and atomic group updates (paper §3.4).
+
+Objects/tasks sharing an affinity key may need to be handled sequentially
+and in order (e.g. frames of one video stream); groups with different keys
+are independent and run in parallel.  Because a group lives entirely in one
+shard, group-atomic multi-object updates need no cross-shard coordination —
+the paper notes this fell out of the design for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+from .object_store import CascadeStore
+
+
+class GroupSequencer:
+    """FIFO execution order within each affinity group.
+
+    ``admit(label, item)`` enqueues; ``ready(label)`` yields the next item
+    only when the previous one for that group was ``complete``d.  Different
+    labels never block each other.
+    """
+
+    def __init__(self):
+        self._queues: Dict[str, Deque[Any]] = defaultdict(deque)
+        self._busy: Dict[str, bool] = defaultdict(bool)
+        self.max_queue_len: int = 0
+
+    def admit(self, label: str, item: Any) -> None:
+        q = self._queues[label]
+        q.append(item)
+        self.max_queue_len = max(self.max_queue_len, len(q))
+
+    def ready(self, label: str) -> Optional[Any]:
+        if self._busy[label] or not self._queues[label]:
+            return None
+        self._busy[label] = True
+        return self._queues[label].popleft()
+
+    def complete(self, label: str) -> None:
+        self._busy[label] = False
+
+    def pending(self, label: str) -> int:
+        return len(self._queues[label]) + (1 if self._busy[label] else 0)
+
+    def drain_ready(self) -> List[Tuple[str, Any]]:
+        out = []
+        for label in list(self._queues):
+            item = self.ready(label)
+            if item is not None:
+                out.append((label, item))
+        return out
+
+
+class AtomicGroupUpdate:
+    """All-or-nothing multi-put of objects sharing one affinity key.
+
+    Single-shard residency makes this a local transaction: we verify every
+    key homes to the same shard, then apply the batch under one version.
+    """
+
+    def __init__(self, store: CascadeStore):
+        self.store = store
+
+    def apply(self, puts: List[Tuple[str, Any]]) -> str:
+        assert puts, "empty atomic update"
+        shards = {self.store.shard_of(k).name for k, _ in puts}
+        labels = {self.store.affinity_of(k) for k, _ in puts}
+        if len(labels) != 1:
+            raise ValueError(f"atomic update spans affinity groups: {labels}")
+        if len(shards) != 1:
+            raise ValueError(f"group split across shards: {shards}")
+        for k, v in puts:
+            self.store.put(k, v, fire=False)
+        return labels.pop()

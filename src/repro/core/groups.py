@@ -1,0 +1,68 @@
+"""Affinity-group registry + migration planning for elastic scaling.
+
+Scaling out adds shards; with rendezvous placement only ~1/n of groups move.
+The registry tracks live groups (labels seen recently) so the autoscaler can
+produce a migration plan (which groups move where, how many bytes) and the
+runtime can execute it without a global pause.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .object_store import CascadeStore
+from .placement import PlacementEngine, RendezvousPlacement
+
+
+@dataclasses.dataclass
+class GroupInfo:
+    label: str
+    pool: str
+    n_objects: int = 0
+    bytes: int = 0
+    last_seen: float = 0.0
+
+
+@dataclasses.dataclass
+class MigrationPlan:
+    moves: List[Tuple[str, str, str, int]]   # (label, from_shard, to_shard, bytes)
+    total_bytes: int
+    fraction_moved: float
+
+
+class GroupRegistry:
+    def __init__(self, store: CascadeStore):
+        self.store = store
+
+    def snapshot(self, pool_prefix: str) -> Dict[str, GroupInfo]:
+        pool = self.store.pools[pool_prefix]
+        groups: Dict[str, GroupInfo] = {}
+        for shard in pool.shards.values():
+            for rec in shard.objects.values():
+                g = groups.setdefault(
+                    rec.affinity,
+                    GroupInfo(label=rec.affinity, pool=pool_prefix))
+                g.n_objects += 1
+                g.bytes += rec.size
+                g.last_seen = time.time()
+        return groups
+
+    def plan_resharding(self, pool_prefix: str, new_n_shards: int
+                        ) -> MigrationPlan:
+        """What moves if the pool is resized to new_n_shards shards."""
+        pool = self.store.pools[pool_prefix]
+        groups = self.snapshot(pool_prefix)
+        old_shards = list(pool.shards)
+        new_shards = [f"{pool.prefix}#s{i}" for i in range(new_n_shards)]
+        moves = []
+        total = 0
+        for label, info in groups.items():
+            old = pool.engine.policy.place(label, old_shards)
+            new = pool.engine.policy.place(label, new_shards)
+            if old != new:
+                moves.append((label, old, new, info.bytes))
+                total += info.bytes
+        frac = len(moves) / max(len(groups), 1)
+        return MigrationPlan(moves=moves, total_bytes=total,
+                             fraction_moved=frac)

@@ -1,0 +1,101 @@
+"""Placement engine: affinity key -> shard/location.
+
+The paper's modified Cascade policy is ``hash(affinity_key) % n_shards``
+(pseudo-random across *groups*, deterministic within a group -> load balance
++ collocation, §4.5 "best of both worlds").  Baseline is the same hash over
+the raw object key ("random placement").
+
+For elastic scaling we also provide rendezvous (HRW) hashing: when a shard
+is added/removed only ~1/n of affinity groups move, and the mapping needs no
+synchronized state — any node computes it locally (the paper's 'lightweight'
+requirement under autoscaling).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Dict, List, Optional, Sequence
+
+from .affinity import AffinityFunction, AffinityKey, Descriptor, affinity_key_for
+
+
+def stable_hash(s: str) -> int:
+    """Deterministic across processes (unlike python's hash())."""
+    return int.from_bytes(hashlib.blake2b(s.encode(), digest_size=8).digest(),
+                          "big")
+
+
+class PlacementPolicy:
+    def place(self, label: str, shards: Sequence[str]) -> str:
+        raise NotImplementedError
+
+    def name(self) -> str:
+        return type(self).__name__
+
+
+class HashPlacement(PlacementPolicy):
+    """hash(label) % n — Cascade's default mapping."""
+
+    def place(self, label: str, shards: Sequence[str]) -> str:
+        return shards[stable_hash(label) % len(shards)]
+
+    def name(self) -> str:
+        return "hash"
+
+
+class RendezvousPlacement(PlacementPolicy):
+    """Highest-random-weight hashing: minimal movement under resharding."""
+
+    def place(self, label: str, shards: Sequence[str]) -> str:
+        return max(shards, key=lambda s: stable_hash(f"{label}::{s}"))
+
+    def name(self) -> str:
+        return "rendezvous"
+
+
+@dataclasses.dataclass
+class PlacementDecision:
+    shard: str
+    label: str
+    grouped: bool           # True if an affinity key drove the decision
+
+
+class PlacementEngine:
+    """Unified placement for data objects AND compute tasks (paper §3.3).
+
+    ``affinity_fn=None`` (or a fn returning None) degrades to the baseline
+    random (key-hash) placement the paper compares against.
+    """
+
+    def __init__(self, shards: Sequence[str],
+                 affinity_fn: Optional[AffinityFunction] = None,
+                 policy: Optional[PlacementPolicy] = None):
+        self.shards: List[str] = list(shards)
+        self.affinity_fn = affinity_fn
+        self.policy = policy or HashPlacement()
+
+    def place(self, desc: Descriptor) -> PlacementDecision:
+        label = affinity_key_for(self.affinity_fn, desc)
+        shard = self.policy.place(label, self.shards)
+        return PlacementDecision(shard=shard, label=label,
+                                 grouped=(label != desc.key))
+
+    # -- elasticity ---------------------------------------------------------
+
+    def add_shard(self, shard: str) -> None:
+        if shard not in self.shards:
+            self.shards.append(shard)
+
+    def remove_shard(self, shard: str) -> None:
+        self.shards.remove(shard)
+
+    def moved_labels(self, labels: Sequence[str],
+                     new_shards: Sequence[str]) -> Dict[str, str]:
+        """Labels whose home changes under a new shard set (migration plan)."""
+        out = {}
+        for lbl in labels:
+            old = self.policy.place(lbl, self.shards)
+            new = self.policy.place(lbl, list(new_shards))
+            if old != new:
+                out[lbl] = new
+        return out

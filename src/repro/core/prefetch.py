@@ -1,0 +1,64 @@
+"""Affinity-driven prefetching (paper §3.4 'Prefetching' + §4.6 replication).
+
+When a task with affinity key `a` is scheduled onto a node, every stored
+object with the same affinity key is a prefetch candidate: the developer has
+declared the correlation, so the platform can warm the node's cache *before*
+the task (or a downstream stage) reads the objects.  The engine returns
+prefetch plans; the runtime executes them (overlapping with compute) and the
+store's cache makes subsequent gets local.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .object_store import CascadeStore, ObjectRecord
+
+
+@dataclasses.dataclass
+class PrefetchPlan:
+    node: str
+    keys: List[str]
+    total_bytes: int
+
+
+class PrefetchEngine:
+    def __init__(self, store: CascadeStore, max_bytes_per_plan: int = 1 << 30):
+        self.store = store
+        self.max_bytes = max_bytes_per_plan
+        self.issued: int = 0
+        self.bytes_issued: int = 0
+
+    def plan_for_task(self, pool_prefix: str, label: str, node: str
+                      ) -> Optional[PrefetchPlan]:
+        """All same-affinity objects not yet cached/local at `node`."""
+        pool = self.store.pools[pool_prefix]
+        keys, total = [], 0
+        for shard in pool.shards.values():
+            local = node in shard.nodes
+            for k, rec in shard.objects.items():
+                if rec.affinity != label:
+                    continue
+                if local:
+                    continue
+                cached = self.store.caches.get(node, {}).get(k)
+                if cached is not None and cached.version == rec.version:
+                    continue
+                if total + rec.size > self.max_bytes:
+                    break
+                keys.append(k)
+                total += rec.size
+        if not keys:
+            return None
+        self.issued += 1
+        self.bytes_issued += total
+        return PrefetchPlan(node=node, keys=keys, total_bytes=total)
+
+    def execute(self, plan: PrefetchPlan) -> int:
+        """Warm the cache (the DES charges the transfer time separately)."""
+        moved = 0
+        for k in plan.keys:
+            rec, local = self.store.get(k, node=plan.node)
+            if rec is not None and not local:
+                moved += rec.size
+        return moved

@@ -1,0 +1,5 @@
+from .sharding_rules import (ShardingRules, default_rules, specs_for_params,
+                             batch_pspec, cache_pspecs)
+
+__all__ = ["ShardingRules", "default_rules", "specs_for_params",
+           "batch_pspec", "cache_pspecs"]

@@ -1,0 +1,102 @@
+"""Jit'd public wrappers for the kernel package with backend dispatch.
+
+Backends:
+  * ``jnp``        — the pure-jnp oracle in ``ref.py`` (CPU, dry-run, GSPMD).
+  * ``pallas``     — the TPU Pallas kernels (compiled, TPU target).
+  * ``interpret``  — Pallas kernels executed with ``interpret=True`` (CPU
+                     correctness validation of the kernel bodies).
+
+The model zoo always calls these wrappers; the dry-run keeps the default
+``jnp`` backend so XLA:CPU can lower the graph for the 512-device mesh, while
+tests flip to ``interpret`` to exercise the Pallas bodies.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Optional
+
+import jax
+
+from . import ref
+
+_BACKEND = "jnp"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("jnp", "pallas", "interpret"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    prev = get_backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def _pallas_mod():
+    from . import flash_attention, decode_attention, ssd_scan, rglru_scan
+    return flash_attention, decode_attention, ssd_scan, rglru_scan
+
+
+# ---------------------------------------------------------------------------
+
+
+def mha(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+        q_offset=0, q_chunk=0, unroll=False):
+    if _BACKEND == "jnp":
+        return ref.mha(q, k, v, causal=causal, window=window, softcap=softcap,
+                       scale=scale, q_offset=q_offset, q_chunk=q_chunk,
+                       unroll=unroll)
+    fa, *_ = _pallas_mod()
+    return fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        q_offset=q_offset, interpret=(_BACKEND == "interpret"))
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, softcap=0.0, scale=None,
+                     window=0):
+    if _BACKEND == "jnp":
+        return ref.decode_attention(q, k_cache, v_cache, lengths,
+                                    softcap=softcap, scale=scale,
+                                    window=window)
+    _, da, *_ = _pallas_mod()
+    return da.decode_attention(
+        q, k_cache, v_cache, lengths, softcap=softcap, scale=scale,
+        window=window, interpret=(_BACKEND == "interpret"))
+
+
+def ssd(x, dt, A, Bm, Cm, D=None, *, chunk=256, init_state=None,
+        unroll=False):
+    if _BACKEND == "jnp":
+        return ref.ssd(x, dt, A, Bm, Cm, D, chunk=chunk,
+                       init_state=init_state, unroll=unroll)
+    *_, ssd_k, _ = _pallas_mod()
+    return ssd_k.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk,
+                          init_state=init_state,
+                          interpret=(_BACKEND == "interpret"))
+
+
+def ssd_decode(x, dt, A, Bm, Cm, D, state):
+    # Single recurrent step: einsum-bound, no kernel needed.
+    return ref.ssd_decode(x, dt, A, Bm, Cm, D, state)
+
+
+def rglru(a, b, h0=None):
+    if _BACKEND == "jnp":
+        return ref.rglru(a, b, h0)
+    *_, rk = _pallas_mod()
+    return rk.rglru_scan(a, b, h0, interpret=(_BACKEND == "interpret"))
+
+
+def rglru_decode(a, b, h):
+    return ref.rglru_decode(a, b, h)

@@ -1,0 +1,82 @@
+"""RG-LRU linear recurrence h_t = a_t * h_{t-1} + b_t for TPU.
+
+Grid (batch, width_blocks, seq_blocks): the width dimension tiles across
+VMEM lanes (block_w multiples of 128), the sequence dimension is innermost
+and sequential with the (1, block_w) hidden state carried in VMEM scratch.
+Inside a sequence block the recurrence steps with a ``fori_loop`` over
+time — elementwise VPU work, which is what this op is on TPU (no MXU
+contraction exists in a diagonal RNN).
+
+Oracle: ``repro.kernels.ref.rglru``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, o_ref, hf_ref, carry_ref, *, bs, ns,
+            use_h0):
+    js = pl.program_id(2)
+
+    @pl.when(js == 0)
+    def _init():
+        if use_h0:
+            carry_ref[...] = h0_ref[...].astype(jnp.float32)
+        else:
+            carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = a_ref[0].astype(jnp.float32)       # (bs, bw)
+    b = b_ref[0].astype(jnp.float32)
+
+    def body(t, h):
+        h = a[t] * h + b[t]                # (bw,)
+        pl.store(o_ref, (0, pl.dslice(t, 1), pl.dslice(None)),
+                 h[None].astype(o_ref.dtype))
+        return h
+
+    h = jax.lax.fori_loop(0, bs, body, carry_ref[0])
+    carry_ref[...] = h[None]
+
+    @pl.when(js == ns - 1)
+    def _fin():
+        hf_ref[...] = carry_ref[...].astype(hf_ref.dtype)
+
+
+def rglru_scan(a, b, h0=None, *, block_s: int = 256, block_w: int = 512,
+               interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """a/b (B,S,W), h0 (B,W) or None. Returns (h (B,S,W), h_final (B,W))."""
+    B, S, W = a.shape
+    bs = min(block_s, S)
+    bw = min(block_w, W)
+    assert S % bs == 0 and W % bw == 0, (S, W, bs, bw)
+    ns, nw = S // bs, W // bw
+    use_h0 = h0 is not None
+    h0_in = h0 if use_h0 else jnp.zeros((B, W), a.dtype)
+    kernel = functools.partial(_kernel, bs=bs, ns=ns, use_h0=use_h0)
+
+    h, hf = pl.pallas_call(
+        kernel,
+        grid=(B, nw, ns),
+        in_specs=[
+            pl.BlockSpec((1, bs, bw), lambda b_, w, s: (b_, s, w)),
+            pl.BlockSpec((1, bs, bw), lambda b_, w, s: (b_, s, w)),
+            pl.BlockSpec((1, bw), lambda b_, w, s: (b_, w)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bw), lambda b_, w, s: (b_, s, w)),
+            pl.BlockSpec((1, bw), lambda b_, w, s: (b_, w)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), a.dtype),
+            jax.ShapeDtypeStruct((B, W), a.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0_in)
+    return h, hf

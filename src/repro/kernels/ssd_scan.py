@@ -1,0 +1,109 @@
+"""Mamba-2 SSD chunked scan for TPU.
+
+Grid (batch, heads, chunks) with the chunk dimension innermost/sequential;
+the (P, N) recurrent state lives in VMEM scratch and carries across chunk
+steps.  Per chunk: intra-chunk quadratic term (L x L decay-weighted C.B^T),
+inter-chunk contribution from the carried state, and the state update —
+all fp32 in VMEM, MXU-shaped matmuls (L, N, P multiples of 128 at
+production sizes).
+
+Oracle: ``repro.kernels.ref.ssd``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, st_ref,
+            h_ref, *, L, nc, has_d):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)                # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)                 # (L,)
+    A = a_ref[0, 0]                                          # scalar
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)               # (L, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)               # (L, N)
+
+    dA = dt * A                                              # (L,) <= 0
+    cum = jnp.cumsum(dA)
+    decay = jnp.exp(cum[:, None] - cum[None, :])             # (L, L)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    decay = jnp.where(tri, decay, 0.0)
+
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (L, L)
+    w = cb * decay * dt[None, :]
+    y = jax.lax.dot(w, x)                                    # intra (L, P)
+
+    h = h_ref[...]                                           # (P, N)
+    cexp = Cm * jnp.exp(cum)[:, None]                        # (L, N)
+    y = y + jax.lax.dot_general(cexp, h, (((1,), (1,)), ((), ())))
+
+    last = cum[L - 1]
+    sdecay = (jnp.exp(last - cum) * dt)[:, None]             # (L, 1)
+    upd = jax.lax.dot_general(x, Bm * sdecay,
+                              (((0,), (0,)), ((), ())))      # (P, N)
+    h_new = h * jnp.exp(last) + upd
+    h_ref[...] = h_new
+
+    if has_d:
+        y = y + x * d_ref[0, 0]
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    st_ref[0, 0] = h_new                                     # last write wins
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D=None, *, chunk: int = 256,
+             init_state=None, interpret: bool = False
+             ) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,G,N); D (H,) or None."""
+    assert init_state is None, "kernel path starts from zero state"
+    B, S_in, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    L = min(chunk, S_in)
+    if S_in % L:
+        pad = L - S_in % L            # dt=0 pad steps are exact no-ops
+        z = lambda a: jnp.pad(a, [(0, 0), (0, pad)]
+                              + [(0, 0)] * (a.ndim - 2))
+        x, dt, Bm, Cm = z(x), z(dt), z(Bm), z(Cm)
+    B, S, H, P = x.shape
+    nc = S // L
+    has_d = D is not None
+    d_in = (D if has_d else jnp.zeros((H,), jnp.float32))
+    kernel = functools.partial(_kernel, L=L, nc=nc, has_d=has_d)
+
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, L, 1, N), lambda b, h, c: (b, c, h // hpg, 0)),
+            pl.BlockSpec((1, L, 1, N), lambda b, h, c: (b, c, h // hpg, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt.astype(jnp.float32),
+      A.astype(jnp.float32).reshape(H, 1), Bm, Cm,
+      d_in.astype(jnp.float32).reshape(H, 1))
+    return y[:, :S_in], state

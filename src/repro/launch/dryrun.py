@@ -1,0 +1,490 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh, extract memory/cost/collective analysis, emit one JSON per cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all          # whole grid
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the device
+count on first backend init.  Tests/benches import other modules and see 1
+device.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+from repro.launch import mesh as meshlib
+from repro.launch import steps as steplib
+from repro.distributed import sharding_rules as sr
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\[?([^]}]*)")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    """Parse replica group size from an HLO collective line."""
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return n_devices
+    body = m.group(1)
+    # iota format: replica_groups=[8,64]<=[512] -> group size = last dim
+    im = re.match(r"\s*(\d+)\s*,\s*(\d+)", body)
+    if "<=" in line and im:
+        return int(im.group(2))
+    # explicit format: {{0,1,2,...},{...}} -> first group length
+    first = body.split("}")[0].lstrip("{")
+    ids = [x for x in first.split(",") if x.strip().isdigit()]
+    return max(len(ids), 1)
+
+
+def collective_stats(hlo_text: str, n_devices: int):
+    """Estimated per-device bytes moved over the interconnect, by op type.
+
+    ring-model factors: all-reduce 2(n-1)/n x buffer; all-gather /
+    reduce-scatter / all-to-all (n-1)/n x full buffer; permute 1x.
+    """
+    stats = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out_bytes = _shape_bytes(m.group(1))
+        op = m.group(2)
+        n = _group_size(line, n_devices)
+        if n <= 1:
+            continue
+        if op == "all-reduce":
+            moved = 2.0 * (n - 1) / n * out_bytes
+        elif op == "all-gather":
+            moved = (n - 1) / n * out_bytes
+        elif op == "reduce-scatter":
+            moved = (n - 1) * out_bytes          # output is the shard
+        elif op == "all-to-all":
+            moved = (n - 1) / n * out_bytes
+        else:                                     # collective-permute
+            moved = float(out_bytes)
+        d = stats.setdefault(op, {"count": 0, "bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += moved
+        total += moved
+    return stats, total
+
+
+def shape_tweaks(cfg, shape):
+    """Per-shape lowering tweaks applied to every compile of a cell.
+
+    Long sequences use q-block-chunked attention so the full compile's
+    memory analysis reflects a deployable (flash-style) footprint instead of
+    a materialized S x S score tensor.
+    """
+    import dataclasses as dc
+    if shape.kind in ("train", "prefill") and shape.seq_len >= 4096 \
+            and cfg.family != "ssm":
+        cfg = dc.replace(cfg, attn_chunk=2048)
+    return cfg
+
+
+def _aux_layer_plan(cfg):
+    """(L1, L2, L_eff) for per-layer cost extrapolation."""
+    if cfg.block_pattern and len(set(cfg.block_pattern)) > 1:
+        period = len(cfg.block_pattern)
+        n_groups = cfg.n_layers // period
+        tail = cfg.n_layers - n_groups * period
+        return period, 2 * period, n_groups + tail / period
+    return 1, 2, float(cfg.n_layers)
+
+
+def _compile_cell(cfg, shape, mesh, rules, extra):
+    bundle = steplib.make_step(shape.kind, cfg, shape, mesh, rules,
+                               **(extra or {}))
+    with mesh:
+        jitted = jax.jit(
+            bundle.fn,
+            in_shardings=steplib.to_shardings(mesh, bundle.in_shardings),
+            out_shardings=steplib.to_shardings(mesh, bundle.out_shardings),
+            donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.input_specs)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _cost_of(compiled, n_devices):
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll_stats, coll_bytes = collective_stats(hlo, n_devices)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": coll_bytes,
+        "coll_stats": coll_stats,
+    }
+
+
+def extrapolated_costs(cfg, shape, mesh, rules, extra):
+    """Exact per-device costs via small unrolled aux compiles.
+
+    XLA's cost analysis counts while-loop bodies ONCE, so the scanned-layer
+    full compile under-reports flops/bytes/collectives.  We re-compile the
+    step with the layer stack AND all inner chunk loops python-unrolled, at
+    a 2x2 grid of (layers L, global batch B).  Per-device cost is affine in
+    both:  c(L, B) = f0 + fB*B + L*(g0 + gB*B)
+    (f0/g0: batch-independent terms like gradient all-reduces; fB/gB:
+    per-token compute/IO).  Solving the grid gives the exact full-shape
+    cost  c(L_eff, B_full)  with compile time bounded by the tiny aux
+    shapes, independent of the deployed batch / chunk counts.
+    """
+    import dataclasses as dc
+    L1, L2, L_eff = _aux_layer_plan(cfg)
+    dp_total = mesh.devices.size // mesh.shape["model"]
+    B_full = shape.global_batch
+    if B_full >= 2 * dp_total:
+        B1, B2 = dp_total, 2 * dp_total
+    elif B_full >= 2 and B_full % 2 == 0:
+        B1, B2 = B_full // 2, B_full
+    else:
+        B1, B2 = B_full, None   # B=1 (long_500k): no B extrapolation
+
+    # inner chunk-loop budget: if the deployed config would unroll too many
+    # chunk bodies, switch to a (L x chunk) grid instead and use the
+    # affine-in-chunk identity  M(ch) = alpha*T + beta*T*ch  (see below).
+    NC_BUDGET = 32
+    T_aux = B1 * shape.seq_len
+    ch_mode = None
+    if cfg.family == "moe" and shape.kind != "decode":
+        nc = T_aux // cfg.moe_chunk
+        if nc > NC_BUDGET:
+            ch_mode = ("moe_chunk", cfg.moe_chunk,
+                       (T_aux // 2, T_aux // 4))
+    if cfg.family == "ssm" and shape.kind != "decode":
+        nc = shape.seq_len // cfg.ssm_chunk
+        if nc > NC_BUDGET:
+            ch_mode = ("ssm_chunk", cfg.ssm_chunk,
+                       (shape.seq_len // 2, shape.seq_len // 4))
+
+    def compile_point(L, B, ch_override=None):
+        kw = {"n_layers": L, "scan_layers": False, "unroll_inner": True}
+        if ch_override is not None:
+            kw[ch_mode[0]] = ch_override
+        aux_cfg = dc.replace(cfg, **kw)
+        aux_shape = dc.replace(shape, global_batch=B)
+        compiled = _compile_cell(aux_cfg, aux_shape, mesh, rules, extra)
+        return _cost_of(compiled, mesh.devices.size)
+
+    cost = {}
+    if ch_mode is not None:
+        # (L x ch) grid at B1; per-token cost has no batch-independent part
+        # for fwd-only steps, so scale linearly to B_full afterwards.
+        _, ch_deploy, (ch_a, ch_b) = ch_mode
+        for L in (L1, L2):
+            for ch in (ch_a, ch_b):
+                cost[(L, ch)] = compile_point(L, B1, ch)
+
+        def solve(get):
+            def layer_at(ch):
+                c1, c2 = get(cost[(L1, ch)]), get(cost[(L2, ch)])
+                g = (c2 - c1) / ((L2 - L1) / L1)
+                return g, c1 - g                      # (per-unit, fixed)
+            gA, fA = layer_at(ch_a)
+            gB_, fB_ = layer_at(ch_b)
+            slope = (gA - gB_) / (ch_a - ch_b)        # beta*T
+            g_deploy = gB_ + slope * (ch_deploy - ch_b)
+            fixed = 0.5 * (fA + fB_)                  # ch-independent
+            total_B1 = fixed + L_eff * g_deploy
+            return total_B1 * (B_full / B1)
+    else:
+        for L in (L1, L2):
+            for B in ((B1,) if B2 is None else (B1, B2)):
+                cost[(L, B)] = compile_point(L, B)
+
+        def solve(get):
+            if B2 is None:
+                c1, c2 = get(cost[(L1, B1)]), get(cost[(L2, B1)])
+                g = (c2 - c1) / ((L2 - L1) / L1)
+                return (c1 - g) + L_eff * g
+            c11, c12 = get(cost[(L1, B1)]), get(cost[(L1, B2)])
+            c21, c22 = get(cost[(L2, B1)]), get(cost[(L2, B2)])
+            gB1 = (c21 - c11) / ((L2 - L1) / L1)
+            gB2 = (c22 - c12) / ((L2 - L1) / L1)
+            g_slope = (gB2 - gB1) / (B2 - B1)
+            g0 = gB1 - g_slope * B1
+            f_at_B1, f_at_B2 = c11 - gB1, c12 - gB2
+            f_slope = (f_at_B2 - f_at_B1) / (B2 - B1)
+            f0 = f_at_B1 - f_slope * B1
+            return (f0 + f_slope * B_full) + L_eff * (g0 + g_slope * B_full)
+
+    out = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        out[key] = max(solve(lambda c, k=key: c[k]), 0.0)
+    types = set()
+    for c in cost.values():
+        types |= set(c["coll_stats"])
+    coll = {}
+    for t in sorted(types):
+        coll[t] = max(solve(
+            lambda c, t=t: c["coll_stats"].get(t, {}).get("bytes", 0.0)), 0.0)
+    out["coll_by_type"] = coll
+    out["aux_points"] = {
+        f"{a}_{b}": {k: cost[(a, b)][k]
+                     for k in ("flops", "bytes", "coll_bytes")}
+        for (a, b) in cost}
+    return out
+
+
+def analytic_model_flops(cfg, shape) -> float:
+    """6*N_active*T (+attention quadratic term) — the 'useful' flops."""
+    N = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    H, Dh = cfg.n_heads, cfg.resolved_head_dim
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.block_kind(i) == "attn")
+    if shape.kind == "train":
+        T = B * S
+        attn = 6.0 * B * n_attn * H * Dh * (
+            S * min(S, cfg.attn_window or S))
+        return 6.0 * N * T + attn
+    if shape.kind == "prefill":
+        T = B * S
+        attn = 2.0 * B * n_attn * H * Dh * S * min(S, cfg.attn_window or S)
+        return 2.0 * N * T + attn
+    # decode: one token per row against an S-deep cache
+    if cfg.mla:
+        kv_read = 2.0 * B * cfg.n_layers * H * S * (
+            cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+    else:
+        kv_read = 4.0 * B * n_attn * H * Dh * min(S, cfg.attn_window or S)
+    return 2.0 * N * B + kv_read
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             rules_name: str = "baseline", extra: dict | None = None,
+             with_aux: bool = True):
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = configs.skip_reason(arch, shape_name)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "rules": rules_name, "skip": skip,
+    }
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}__{rules_name}.json"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    if skip:
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"SKIP {arch} x {shape_name}: {skip}")
+        return rec
+
+    mesh = meshlib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_devices = mesh.devices.size
+    rules = make_rules(rules_name, mesh, cfg, shape)
+    cfg, extra = apply_ruleset(rules_name, cfg, extra, shape)
+    cfg = shape_tweaks(cfg, shape)
+    if RULESETS[rules_name].get("no_attn_chunk"):
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, attn_chunk=0)
+    t0 = time.time()
+    # full compile: proves the cell lowers+compiles; memory analysis
+    compiled = _compile_cell(cfg, shape, mesh, rules, extra)
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            mem_rec[attr] = getattr(mem, attr, None)
+
+    # exact costs from unrolled aux compiles (see extrapolated_costs);
+    # multi-pod cells are compile-proof + memory only (roofline table is
+    # single-pod per EXPERIMENTS.md §Roofline).
+    if with_aux:
+        t1 = time.time()
+        costs = extrapolated_costs(cfg, shape, mesh, rules, extra)
+        t_aux = time.time() - t1
+    else:
+        t_aux = 0.0
+        costs = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0,
+                 "coll_by_type": {}, "aux_points": {}}
+    flops = costs["flops"]
+    bytes_acc = costs["bytes"]
+    coll_bytes = costs["coll_bytes"]
+    coll_stats = costs["coll_by_type"]
+    model_flops = analytic_model_flops(cfg, shape)
+
+    chips = n_devices
+    # cost_analysis of an SPMD module is per-partition.
+    t_comp = flops / meshlib.PEAK_FLOPS_BF16
+    t_mem = bytes_acc / meshlib.HBM_BW
+    # per-device collective bytes over ICI links (v5e: ~4 usable links/chip)
+    t_coll = coll_bytes / (4 * meshlib.ICI_BW_PER_LINK)
+    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
+
+    rec.update({
+        "n_devices": chips,
+        "compile_s": round(t_compile, 2),
+        "aux_compile_s": round(t_aux, 2),
+        "aux_points": costs["aux_points"],
+        "memory": mem_rec,
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives": coll_stats,
+        "model_flops_total": model_flops,
+        "model_flops_per_device": model_flops / chips,
+        "useful_flop_ratio": (model_flops / chips) / flops if flops else None,
+        "roofline": {
+            "compute_s": t_comp,
+            "memory_s": t_mem,
+            "collective_s": t_coll,
+            "dominant": dom[1],
+            "roofline_fraction": t_comp / max(t_comp, t_mem, t_coll)
+            if max(t_comp, t_mem, t_coll) > 0 else None,
+        },
+    })
+    out_path.write_text(json.dumps(rec, indent=2))
+    print(f"OK {arch} x {shape_name} x {mesh_kind} [{rules_name}] "
+          f"compile={t_compile:.1f}s flops/dev={flops:.3e} "
+          f"bytes/dev={bytes_acc:.3e} coll/dev={coll_bytes:.3e} "
+          f"dom={dom[1]}")
+    return rec
+
+
+# Named rule-sets for the §Perf hillclimb.  'baseline' is the recorded
+# paper-faithful sweep; 'opt_*' sets flip the beyond-paper knobs (see
+# ModelConfig + make_train_step) and re-lower the same cell.
+RULESETS = {
+    "baseline": {},
+    "tp_only": {"fsdp": False},
+    "fsdp": {"fsdp": True},
+    # seq-sharded attention for non-TP-divisible head counts
+    "opt_attnseq": {"cfg": {"attn_seq_shard": True}},
+    # + one-hot loss + grads pinned to FSDP layout (reduce-scatter)
+    "opt_train": {"cfg": {"attn_seq_shard": True, "onehot_loss": True},
+                  "extra": {"constrain_grads": True}},
+    # MoE decode: keep expert weights sharded (no per-step gather)
+    "opt_moedec": {"cfg": {"moe_hoist_gather": False}},
+    # + Megatron-style sequence-parallel residual stream
+    "opt_train2": {"cfg": {"attn_seq_shard": True, "onehot_loss": True,
+                           "seq_parallel_residual": True},
+                   "extra": {"constrain_grads": True}},
+    # dsv2: drop q-block-chunked attention (GSPMD full-remat pathology in
+    # the chunk scan's bwd — 'Involuntary full rematerialization' warnings)
+    "opt_dsv2": {"cfg": {"onehot_loss": True},
+                 "extra": {"constrain_grads": True},
+                 "no_attn_chunk": True},
+    # MoE train: 4x bigger token chunks -> 4x fewer per-chunk expert-grad
+    # partial reductions (the dominant collective in llama4/dsv2 train)
+    "opt_moetrain": {"cfg": {"attn_seq_shard": True, "onehot_loss": True,
+                             "moe_chunk": 16384,
+                             "seq_parallel_residual": True},
+                     "extra": {"constrain_grads": True}},
+    # everything on
+    "opt_all": {"cfg": {"attn_seq_shard": True, "onehot_loss": True,
+                        "moe_hoist_gather": False,
+                        "seq_parallel_residual": True},
+                "extra": {"constrain_grads": True}},
+}
+
+
+def make_rules(name: str, mesh, cfg, shape):
+    rs = RULESETS[name]
+    if "fsdp" in rs:
+        return sr.default_rules(mesh, fsdp=rs["fsdp"])
+    # FSDP (ZeRO-3 style param+opt sharding over 'data') is part of the
+    # baseline wherever TP-only sharding cannot fit 16 GB/chip HBM.
+    return sr.default_rules(mesh, fsdp=cfg.param_count() >= 8e9)
+
+
+def apply_ruleset(name: str, cfg, extra: dict, shape):
+    import dataclasses as dc
+    rs = RULESETS[name]
+    cfg_over = dict(rs.get("cfg", {}))
+    if cfg_over:
+        cfg = dc.replace(cfg, **cfg_over)
+    extra = dict(extra or {})
+    if shape.kind == "train":
+        extra.update(rs.get("extra", {}))
+    return cfg, extra
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    ap.add_argument("--accum-steps", type=int, default=0,
+                    help="grad accumulation (train cells); 0 = default")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    if args.all:
+        cells = [(a, s) for a, s, _ in configs.cells()]
+        meshes = ["single", "multi"]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+        meshes = [args.mesh]
+
+    failures = []
+    for arch, shape in cells:
+        for mk in meshes:
+            out_path = out_dir / f"{arch}__{shape}__{mk}__{args.rules}.json"
+            if args.skip_existing and out_path.exists():
+                continue
+            extra = {}
+            if SHAPES[shape].kind == "train" and args.accum_steps:
+                extra["accum_steps"] = args.accum_steps
+            try:
+                run_cell(arch, shape, mk, out_dir, args.rules, extra,
+                         with_aux=(mk == "single"))
+            except Exception as e:  # noqa: BLE001 — record, keep going
+                failures.append((arch, shape, mk, repr(e)[:500]))
+                print(f"FAIL {arch} x {shape} x {mk}: {e!r}", file=sys.stderr)
+    if failures:
+        print(json.dumps(failures, indent=2), file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Kernel-fused HBM-traffic model for the roofline memory term.
+
+XLA:CPU's ``bytes accessed`` counts every unfused elementwise op as an HBM
+round trip, overstating TPU traffic by 1-2 orders of magnitude (on TPU the
+XLA fusion pass + our Pallas kernels keep chains in VMEM/registers — e.g.
+flash attention never materializes the S x S score tensor).  This module
+gives the memory term a TPU-realistic estimate from first principles; the
+measured XLA number is reported alongside as ``bytes_xla_unfused``.
+
+Model assumptions (documented per term):
+  * flash attention: q/k/v read + o write only (fwd), x3 for train
+    (fwd + remat-fwd + bwd);
+  * weights: read once per pass (FSDP all-gathers materialize the gathered
+    tensor once per pass — traffic == gathered size);
+  * optimizer: read m,v + write m,v,p on the LOCAL (FSDP) shard;
+  * activations: ACT_RW r/w-equivalents of the (T_local, d) residual stream
+    per layer per pass — covers norms/gates/residuals after fusion;
+  * MoE: dispatched-token tensors ~ topk*cf oversampled copies of the
+    stream + touched expert weights (decode touches min(E, B*topk) experts
+    — the MoE-decode wall);
+  * decode: full KV (or latent/SSM state) read per step, sharded over
+    'model' when the layout shards it.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.models.common import ModelConfig
+
+ACT_RW = 10        # residual-stream r/w equivalents per layer per fwd pass
+BF16 = 2
+
+
+def tpu_memory_model(cfg: ModelConfig, shape, *, dp: int = 16, tp: int = 16,
+                     fsdp: bool = None) -> Dict[str, float]:
+    if fsdp is None:
+        fsdp = cfg.param_count() >= 8e9
+    B, S = shape.global_batch, shape.seq_len
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab_size
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    P_total = cfg.param_count()
+    kind = shape.kind
+
+    n_dev = dp * tp
+    # tokens per device (batch shards over dp when divisible)
+    dp_eff = dp if B % dp == 0 else 1
+    T_loc = (B // dp_eff) * (S if kind != "decode" else 1)
+    opt_bytes = 2 if str(cfg.opt_state_dtype).endswith("bfloat16") else 4
+
+    w_read = P_total * BF16 / tp                 # gathered weights, per pass
+    p_local = P_total * BF16 / (tp * (dp if fsdp else 1))
+
+    terms: Dict[str, float] = {}
+
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.block_kind(i) == "attn")
+    win = cfg.attn_window or S
+
+    if kind == "train":
+        passes = 3                                # fwd + remat-fwd + bwd
+        terms["weights"] = passes * w_read
+        terms["grads_opt"] = p_local * (1 + 1) + \
+            (P_total / (tp * (dp if fsdp else 1))) * opt_bytes * 4 + p_local
+        terms["activations"] = passes * ACT_RW * T_loc * d * BF16 * L
+        terms["attention_io"] = passes * n_attn * T_loc * (
+            2 * H * Dh + 2 * K * Dh) * BF16
+        terms["logits"] = 2 * T_loc * (V / tp) * BF16 * 2
+    elif kind == "prefill":
+        terms["weights"] = w_read
+        terms["activations"] = ACT_RW * T_loc * d * BF16 * L
+        terms["attention_io"] = n_attn * T_loc * (2 * H * Dh
+                                                  + 2 * K * Dh) * BF16
+        terms["kv_write"] = n_attn * T_loc * 2 * K * Dh * BF16 / \
+            (tp if (K % tp == 0 or True) else 1)
+        terms["logits"] = T_loc * (V / tp) * BF16
+    else:                                         # decode
+        if cfg.family == "moe":
+            touched = min(cfg.n_experts, B * cfg.moe_top_k)
+            e_params = (cfg.n_layers * cfg.n_experts
+                        * cfg.mlp_params(cfg.moe_d_ff))
+            dense = P_total - e_params
+            terms["weights"] = (dense * BF16 / tp
+                                + e_params * BF16 / tp
+                                * touched / cfg.n_experts)
+        else:
+            terms["weights"] = w_read
+        # per-step KV / state read, sharded over tp when the layout can
+        if cfg.mla:
+            kv = L * B * S * (cfg.kv_lora_rank + cfg.qk_rope_dim) * BF16
+            kv /= tp                              # seq-sharded latent
+        elif cfg.family == "ssm":
+            _, di = d, cfg.ssm_expand * d
+            Hs = di // cfg.ssm_head_dim
+            kv = L * B * (Hs * cfg.ssm_head_dim * cfg.ssm_state * 4
+                          + 3 * di * BF16)
+            kv /= tp if Hs % tp == 0 else 1
+        else:
+            eff = min(S, win)
+            kv = n_attn * B * eff * 2 * K * Dh * BF16
+            kv /= tp                              # kv-head or seq sharded
+            if cfg.block_pattern:                 # hybrid: + LRU states
+                n_rec = L - n_attn
+                kv += n_rec * B * cfg.lru_width * BF16 / tp
+        terms["kv_state"] = kv / dp_eff
+        terms["activations"] = ACT_RW * T_loc * d * BF16 * L
+        terms["logits"] = T_loc * (V / tp) * BF16
+
+    if cfg.family == "moe" and kind != "decode":
+        passes = 3 if kind == "train" else 1
+        over = cfg.moe_top_k * cfg.moe_capacity_factor
+        terms["moe_dispatch"] = passes * 3 * T_loc * over * d * BF16
+
+    terms["total"] = sum(terms.values())
+    return terms

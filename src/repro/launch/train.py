@@ -1,0 +1,52 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On this CPU container use --smoke (reduced config).  On a real pod, drop
+--smoke and pass --mesh single|multi to train the full config on the
+production mesh (same code path the dry-run proves out).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro import configs
+from repro.configs.shapes import ShapeConfig
+from repro.training import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="local", choices=["local", "single",
+                                                        "multi"])
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke \
+        else configs.get_config(args.arch)
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    mesh = None
+    if args.mesh != "local":
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+
+    tc = TrainConfig(n_steps=args.steps, ckpt_every=args.ckpt_every,
+                     ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(cfg, shape, tc, mesh=mesh)
+    hist = trainer.run()
+    first = sum(h["loss"] for h in hist[:5]) / max(len(hist[:5]), 1)
+    last = sum(h["loss"] for h in hist[-5:]) / max(len(hist[-5:]), 1)
+    print(f"done: steps={trainer.step} loss {first:.4f} -> {last:.4f}")
+
+
+if __name__ == "__main__":
+    main()

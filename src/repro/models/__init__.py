@@ -1,0 +1,4 @@
+from .common import ModelConfig, count_params
+from .model import Model, build_model
+
+__all__ = ["ModelConfig", "Model", "build_model", "count_params"]

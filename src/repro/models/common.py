@@ -1,0 +1,245 @@
+"""Common model-building utilities: configs, initializers, logical axes.
+
+Every parameter tensor in the zoo is annotated with *logical axis names*
+(e.g. ``("vocab", "embed")``).  ``repro.distributed.sharding_rules`` maps
+logical names onto physical mesh axes per (arch, shape, mesh) — this is the
+single knob the perf hillclimb turns.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+Family = str  # "dense" | "moe" | "hybrid" | "ssm" | "encoder" | "vlm"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    # --- MLP ---
+    mlp_variant: str = "swiglu"        # swiglu | relu2 | gelu | geglu
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    # --- rope / norm ---
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0                  # per-expert hidden dim
+    moe_capacity_factor: float = 1.25
+    moe_chunk: int = 4096              # token-chunk for dispatch memory bound
+    # --- MLA (deepseek-v2) ---
+    mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # --- hybrid (recurrentgemma) ---
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rglru","rglru","attn")
+    lru_width: int = 0
+    conv_width: int = 4
+    attn_window: int = 0               # 0 -> global attention
+    # --- ssm (mamba2) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_ngroups: int = 1
+    # --- modality frontend stubs ---
+    frontend: str = "none"             # none | audio | vision
+    frontend_dim: int = 0              # feature dim supplied by the stub
+    n_patches: int = 0                 # vlm: patches per request
+    # --- dtypes ---
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    # --- training ---
+    remat: str = "layer"               # none | layer | dots
+    opt_state_dtype: Any = jnp.float32  # bf16 for >=100B archs (fits HBM)
+    opt_factored: bool = False         # Adafactor-style 2nd moment (llama4)
+    # --- lowering controls (dry-run cost extraction; see launch.dryrun) ---
+    scan_layers: bool = True           # False: python-unrolled layer stack
+    unroll_inner: bool = False         # True: unroll inner chunk loops
+    attn_chunk: int = 0                # >0: q-block-chunked attention
+    # --- beyond-paper perf knobs (EXPERIMENTS.md §Perf; default = the
+    #     paper-faithful baseline the dry-run sweep recorded) ---
+    attn_seq_shard: bool = False       # shard q-seq over 'model' when heads
+    #                                    don't divide TP (qwen/llama4 40H)
+    onehot_loss: bool = False          # einsum-onehot CE (vocab-sharded
+    #                                    friendly; avoids logits all-reduce)
+    moe_hoist_gather: bool = True      # force expert FSDP gather pre-loop
+    #                                    (False: keep weights sharded;
+    #                                    right for tiny decode batches)
+    seq_parallel_residual: bool = False  # Megatron-SP: residual stream
+    #                                    sharded over 'model' between blocks
+    #                                    (AG+RS instead of all-reduce)
+    # --- misc ---
+    logit_softcap: float = 0.0
+    is_causal: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model flops)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        nh, nkv = self.n_heads, self.n_kv_heads
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        for i in range(self.n_layers):
+            kind = self.block_kind(i)
+            if kind == "attn":
+                if self.mla:
+                    qdim = nh * (self.qk_nope_dim + self.qk_rope_dim)
+                    attn = d * (self.q_lora_rank or qdim)
+                    if self.q_lora_rank:
+                        attn += self.q_lora_rank * qdim
+                    attn += d * (self.kv_lora_rank + self.qk_rope_dim)
+                    attn += self.kv_lora_rank * nh * (self.qk_nope_dim + self.v_head_dim)
+                    attn += nh * self.v_head_dim * d
+                else:
+                    attn = d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+                total += attn
+            elif kind == "rglru":
+                w = self.lru_width
+                total += 2 * d * w + w * self.conv_width + 3 * w + w * d
+            elif kind == "ssd":
+                di = self.ssm_expand * d
+                nheads = di // self.ssm_head_dim
+                total += d * (2 * di + 2 * self.ssm_ngroups * self.ssm_state + nheads)
+                total += self.conv_width * (di + 2 * self.ssm_ngroups * self.ssm_state)
+                total += 2 * nheads + di * d
+            if kind in ("attn", "rglru"):   # blocks followed by an MLP
+                if self.n_experts and kind == "attn" and self.family == "moe":
+                    pass  # handled below
+                else:
+                    total += self.mlp_params(f)
+            if self.family == "moe" and kind == "attn":
+                total += self.n_experts * self.mlp_params(self.moe_d_ff)
+                total += self.n_shared_experts * self.mlp_params(self.moe_d_ff if self.name.startswith("deepseek") else self.d_ff)
+                total += d * self.n_experts  # router
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed-to experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        dense = self.param_count()
+        all_expert = self.n_layers * self.n_experts * self.mlp_params(self.moe_d_ff)
+        active_expert = self.n_layers * self.moe_top_k * self.mlp_params(self.moe_d_ff)
+        return dense - all_expert + active_expert
+
+    def mlp_params(self, f: int) -> int:
+        d = self.d_model
+        if self.mlp_variant in ("swiglu", "geglu"):
+            return 3 * d * f
+        return 2 * d * f
+
+    def block_kind(self, layer_idx: int) -> str:
+        if self.block_pattern:
+            return self.block_pattern[layer_idx % len(self.block_pattern)]
+        if self.family == "ssm":
+            return "ssd"
+        return "attn"
+
+    def kv_cache_spec(self, batch: int, max_seq: int) -> Dict[str, Any]:
+        """Shapes of the per-request decode state (see models.cache)."""
+        raise NotImplementedError  # provided by models.cache
+
+
+# ---------------------------------------------------------------------------
+# Initializers (all take (key, shape, dtype))
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, dtype, stddev=0.02):
+    return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def scaled_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def zeros_init(key, shape, dtype):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+class ParamFactory:
+    """Collects params + logical axes while a model's ``init`` runs.
+
+    Usage::
+        pf = ParamFactory(rng, dtype)
+        w = pf.param("wq", (d, h, hd), ("embed", "heads", "head_dim"))
+    """
+
+    def __init__(self, key: jax.Array, dtype):
+        self._key = key
+        self.dtype = dtype
+        self.params: Dict[str, Any] = {}
+        self.axes: Dict[str, Any] = {}
+
+    def _next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, name, shape, logical_axes, init=scaled_init, **kw):
+        assert len(shape) == len(logical_axes), (name, shape, logical_axes)
+        self.params[name] = init(self._next(), shape, self.dtype, **kw)
+        self.axes[name] = logical_axes
+        return self.params[name]
+
+    def subtree(self, name: str) -> "ParamFactory":
+        sub = ParamFactory(self._next(), self.dtype)
+        self.params[name] = sub.params
+        self.axes[name] = sub.axes
+        return sub
+
+
+def stack_params(trees: Sequence[Any]) -> Any:
+    """Stack a list of identical param pytrees along a new leading axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def stack_axes(axes_tree: Any) -> Any:
+    """Prefix every logical-axes tuple with 'layers' (for stacked scans)."""
+    return jax.tree_util.tree_map(
+        lambda a: ("layers",) + tuple(a),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, str) for e in x),
+    )
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,140 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with the compressed-KV cache.
+
+Decode uses the *absorbed* formulation: the per-head key up-projection is
+folded into the query, so attention runs directly against the (kv_lora_rank +
+rope_dim)-wide latent cache — this is what makes MLA's decode cache ~an order
+of magnitude smaller than GQA's and is the reason dsv2 is a serving-friendly
+arch.  Prefill/train use the expanded (materialized K/V) form + flash mha.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .common import ModelConfig, ParamFactory, scaled_init
+from . import layers
+
+Params = Dict[str, Any]
+
+
+def init_mla(pf: ParamFactory, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    qlr, kvlr = cfg.q_lora_rank, cfg.kv_lora_rank
+    qk_n, qk_r, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    layers.init_rmsnorm(pf, "ln", d)
+    pf.param("wq_a", (d, qlr), ("embed", "q_lora"), fan_in=d)
+    layers.init_rmsnorm(pf, "q_norm", qlr)
+    pf.param("wq_b", (qlr, H, qk_n + qk_r), ("q_lora", "heads", "head_dim"),
+             fan_in=qlr)
+    pf.param("wkv_a", (d, kvlr + qk_r), ("embed", "kv_lora"), fan_in=d)
+    layers.init_rmsnorm(pf, "kv_norm", kvlr)
+    pf.param("wk_nope", (kvlr, H, qk_n), ("kv_lora", "heads", "head_dim"),
+             fan_in=kvlr)
+    pf.param("wv", (kvlr, H, vd), ("kv_lora", "heads", "head_dim"), fan_in=kvlr)
+    pf.param("wo", (H, vd, d), ("heads", "head_dim", "embed"), fan_in=H * vd)
+
+
+def _project_q(p: Params, cfg: ModelConfig, h: jax.Array, positions: jax.Array):
+    cd = cfg.compute_dtype
+    cq = layers.rmsnorm(p["q_norm"], h @ p["wq_a"].astype(cd), cfg.norm_eps)
+    q = jnp.einsum("bsl,lhk->bshk", cq, p["wq_b"].astype(cd))
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_rope = layers.rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p: Params, cfg: ModelConfig, h: jax.Array,
+                       positions: jax.Array):
+    cd = cfg.compute_dtype
+    ckv_full = h @ p["wkv_a"].astype(cd)
+    ckv = layers.rmsnorm(p["kv_norm"], ckv_full[..., :cfg.kv_lora_rank],
+                         cfg.norm_eps)
+    k_rope = ckv_full[..., cfg.kv_lora_rank:][:, :, None, :]  # (B,S,1,rope)
+    k_rope = layers.rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return ckv, k_rope                                         # (B,S,kvlr),(B,S,r)
+
+
+def _expanded_attention(p: Params, cfg: ModelConfig, q_nope, q_rope, ckv,
+                        k_rope, window: int = 0):
+    cd = cfg.compute_dtype
+    H = cfg.n_heads
+    k_nope = jnp.einsum("bsl,lhk->bshk", ckv, p["wk_nope"].astype(cd))
+    v = jnp.einsum("bsl,lhk->bshk", ckv, p["wv"].astype(cd))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:3] + (cfg.qk_rope_dim,))],
+        axis=-1)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    o = ops.mha(q, k, v, causal=True, scale=scale, window=window,
+                q_chunk=cfg.attn_chunk, unroll=cfg.unroll_inner)
+    return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(cd))
+
+
+def mla_train(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, _ = x.shape
+    h = layers.rmsnorm(p["ln"], x, cfg.norm_eps)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q_nope, q_rope = _project_q(p, cfg, h, pos)
+    ckv, k_rope = _project_kv_latent(p, cfg, h, pos)
+    return x + _expanded_attention(p, cfg, q_nope, q_rope, ckv, k_rope)
+
+
+def mla_prefill(p: Params, cfg: ModelConfig, x: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, _ = x.shape
+    h = layers.rmsnorm(p["ln"], x, cfg.norm_eps)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q_nope, q_rope = _project_q(p, cfg, h, pos)
+    ckv, k_rope = _project_kv_latent(p, cfg, h, pos)
+    out = x + _expanded_attention(p, cfg, q_nope, q_rope, ckv, k_rope)
+    return out, {"ckv": ckv, "k_rope": k_rope}
+
+
+def mla_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+               cache: Dict[str, jax.Array], lengths: jax.Array
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed-matmul MLA decode against the latent cache.
+
+    x: (B, d); cache ckv (B, Smax, kvlr), k_rope (B, Smax, rope).
+    """
+    B, _ = x.shape
+    cd = cfg.compute_dtype
+    h = layers.rmsnorm(p["ln"], x[:, None, :], cfg.norm_eps)
+    pos = lengths[:, None]
+    q_nope, q_rope = _project_q(p, cfg, h, pos)                # (B,1,H,*)
+    ckv_new, k_rope_new = _project_kv_latent(p, cfg, h, pos)   # (B,1,*)
+    bidx = jnp.arange(B)
+    ckv_c = cache["ckv"].at[bidx, lengths].set(
+        ckv_new[:, 0].astype(cache["ckv"].dtype))
+    kr_c = cache["k_rope"].at[bidx, lengths].set(
+        k_rope_new[:, 0].astype(cache["k_rope"].dtype))
+
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    # absorb wk_nope into q: (B,H,nope) @ (kvlr,H,nope) -> (B,H,kvlr)
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope[:, 0], p["wk_nope"].astype(cd))
+    logits = (jnp.einsum("bhl,btl->bht", q_lat.astype(jnp.float32),
+                         ckv_c.astype(jnp.float32))
+              + jnp.einsum("bhr,btr->bht", q_rope[:, 0].astype(jnp.float32),
+                           kr_c.astype(jnp.float32))) * scale
+    Smax = ckv_c.shape[1]
+    mask = jnp.arange(Smax)[None] < (lengths + 1)[:, None]
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bht,btl->bhl", probs,
+                       ckv_c.astype(jnp.float32)).astype(cd)
+    o = jnp.einsum("bhl,lhv->bhv", o_lat, p["wv"].astype(cd))
+    out = jnp.einsum("bhv,hvd->bd", o, p["wo"].astype(cd))
+    return x + out, {"ckv": ckv_c, "k_rope": kr_c}
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, max_seq, cfg.kv_lora_rank),
+                                    cfg.compute_dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_seq, cfg.qk_rope_dim),
+                                       cfg.compute_dtype),
+    }

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts MLP with capacity-based einsum dispatch.
+
+GSPMD-friendly (MaxText-style "dropping" dispatch): tokens are processed in
+fixed-size chunks via ``lax.scan`` so the (chunk, E, C) dispatch tensor stays
+bounded regardless of global batch; experts shard over the ``model`` mesh
+axis (EP), tokens over ``data`` — the dispatch einsums lower to all-to-alls.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from .common import ModelConfig, ParamFactory, scaled_init, zeros_init
+from . import layers
+
+Params = Dict[str, Any]
+
+
+def init_moe_mlp(pf: ParamFactory, cfg: ModelConfig):
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    layers.init_rmsnorm(pf, "ln", d)
+    pf.param("router", (d, E), ("embed", "experts"), init=scaled_init, fan_in=d)
+    pf.param("e_gate", (E, d, f), ("experts", "embed", "mlp"), fan_in=d)
+    pf.param("e_up", (E, d, f), ("experts", "embed", "mlp"), fan_in=d)
+    pf.param("e_down", (E, f, d), ("experts", "mlp", "embed"), fan_in=f)
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        pf.param("s_gate", (d, fs), ("embed", "mlp"), fan_in=d)
+        pf.param("s_up", (d, fs), ("embed", "mlp"), fan_in=d)
+        pf.param("s_down", (fs, d), ("mlp", "embed"), fan_in=fs)
+
+
+def _capacity(chunk: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(chunk * cfg.moe_top_k * cfg.moe_capacity_factor
+                      / cfg.n_experts))
+    # multiple of 16 so the capacity dim shards over the 'data' axis
+    return max(16, -(-c // 16) * 16)
+
+
+def _dispatch_combine(gates: jax.Array, idx: jax.Array, E: int, C: int):
+    """gates/idx: (T, k). Returns combine (T, E, C) fp32 (0 where dropped)."""
+    T, k = idx.shape
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)          # (T,k,E)
+    # token-major priority: position of each (t, slot) within its expert
+    flat = onehot.transpose(1, 0, 2).reshape(k * T, E)          # slot-major
+    pos_flat = jnp.cumsum(flat, axis=0) - flat
+    pos = pos_flat.reshape(k, T, E).transpose(1, 0, 2)          # (T,k,E)
+    pos = jnp.sum(pos * onehot, axis=-1)                        # (T,k)
+    keep = pos < C
+    combine = jnp.zeros((T, E, C), jnp.float32)
+    for s in range(k):                                          # k is small
+        sel = jax.nn.one_hot(pos[:, s], C, dtype=jnp.float32)   # (T,C)
+        contrib = (onehot[:, s, :, None] * sel[:, None, :]
+                   * (gates[:, s] * keep[:, s])[:, None, None])
+        combine = combine + contrib
+    return combine
+
+
+def moe_mlp_core(p: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    """h: (B, S, d) normalized hidden. Returns MoE output (no residual)."""
+    B, S, d = h.shape
+    T = B * S
+    cd = cfg.compute_dtype
+    ht = h.reshape(T, d)
+    chunk = min(cfg.moe_chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    nchunks = T // chunk
+    C = _capacity(chunk, cfg)
+    E, k = cfg.n_experts, cfg.moe_top_k
+
+    # Hoist the FSDP weight all-gather out of the token-chunk loop: pin the
+    # gathered experts to (E over 'model', replicated elsewhere) ONCE here;
+    # without this GSPMD re-gathers ~0.5 GB/expert-tensor per chunk body.
+    # For tiny token counts (decode) gathering 100s of GB of experts to
+    # process a handful of tokens is the wrong trade — keep them sharded
+    # and let the einsum partial-sum over the FSDP axis instead.
+    if cfg.moe_hoist_gather:
+        eg = constrain(p["e_gate"].astype(cd), "tp", None, None)
+        eu = constrain(p["e_up"].astype(cd), "tp", None, None)
+        ed = constrain(p["e_down"].astype(cd), "tp", None, None)
+    else:
+        # keep expert weights FSDP-sharded; the expert einsums below pin
+        # their contracted dim over 'data' so GSPMD partial-sums in place
+        # (an (E,C,f)-sized all-reduce) instead of gathering weights.
+        eg = p["e_gate"].astype(cd)
+        eu = p["e_up"].astype(cd)
+        ed = p["e_down"].astype(cd)
+    router = p["router"]
+
+    def one_chunk(_, xc):                                       # xc: (chunk, d)
+        xc = constrain(xc, "dp", None)
+        logits = (xc.astype(jnp.float32) @ router.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)                 # (chunk, E)
+        gates, idx = jax.lax.top_k(probs, k)
+        gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+        combine = _dispatch_combine(gates, idx, E, C)           # (chunk,E,C)
+        combine = constrain(combine, "dp", "tp", None)
+        dispatch = (combine > 0).astype(cd)
+        xin = jnp.einsum("tec,td->ecd", dispatch, xc)           # (E,C,d)
+        if cfg.moe_hoist_gather:
+            # experts over 'model' (EP), capacity over 'data': compute
+            # shards over the full mesh; resharding is an all-to-all.
+            xin = constrain(xin, "tp", "dp", None)
+            act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, eg))
+            act = act * jnp.einsum("ecd,edf->ecf", xin, eu)
+            act = constrain(act, "tp", "dp", None)
+            yout = jnp.einsum("ecf,efd->ecd", act, ed)          # (E,C,d)
+            yout = constrain(yout, "tp", "dp", None)
+        else:
+            # decode regime: shard the CONTRACTED dims over 'data' to
+            # match the weights' FSDP layout — activations move, weights
+            # don't (128 tokens should not gather 100s of GB of experts).
+            xin = constrain(xin, "tp", None, "dp")
+            act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, eg))
+            act = act * jnp.einsum("ecd,edf->ecf", xin, eu)
+            act = constrain(act, "tp", None, "dp")
+            yout = jnp.einsum("ecf,efd->ecd", act, ed)          # (E,C,d)
+        out = jnp.einsum("tec,ecd->td", combine.astype(cd), yout)
+        out = constrain(out, "dp", None)
+        return None, out
+
+    if nchunks == 1:
+        _, out = one_chunk(None, ht)
+    elif cfg.unroll_inner:
+        outs = [one_chunk(None, ht[i * chunk:(i + 1) * chunk])[1]
+                for i in range(nchunks)]
+        out = jnp.concatenate(outs, axis=0)
+    else:
+        _, out = jax.lax.scan(one_chunk, None,
+                              ht.reshape(nchunks, chunk, d))
+        out = out.reshape(T, d)
+    out = out.reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        sg = jax.nn.silu(h @ p["s_gate"].astype(cd)) * (h @ p["s_up"].astype(cd))
+        out = out + sg @ p["s_down"].astype(cd)
+    return out
+
+
+def moe_block(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = layers.rmsnorm(p["ln"], x, cfg.norm_eps)
+    return x + moe_mlp_core(p, cfg, h)
+
+
+def aux_load_balance_loss(p: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    """Switch-style auxiliary loss (fraction-dispatched × mean router prob)."""
+    T = h.shape[0] * h.shape[1]
+    logits = (h.reshape(T, -1).astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts, dtype=jnp.float32), 0)
+    return cfg.n_experts * jnp.sum(frac * jnp.mean(probs, axis=0))

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Residual block layout follows Griffin: norm -> temporal-mixer -> residual,
+where the mixer is the gated recurrent branch (linear -> causal conv ->
+RG-LRU) multiplied by a GeLU branch, followed by an output projection.
+Gates use block-diagonal linears (nb blocks) as in the reference Flax impl.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .common import ModelConfig, ParamFactory, scaled_init, zeros_init, ones_init
+from . import layers
+
+Params = Dict[str, Any]
+
+GATE_BLOCKS = 16
+LRU_C = 8.0
+
+
+def init_rglru_block(pf: ParamFactory, cfg: ModelConfig):
+    d, W, cw = cfg.d_model, cfg.lru_width, cfg.conv_width
+    nb = GATE_BLOCKS
+    layers.init_rmsnorm(pf, "ln", d)
+    pf.param("w_x", (d, W), ("embed", "lru"), fan_in=d)
+    pf.param("w_gate", (d, W), ("embed", "lru"), fan_in=d)
+    pf.param("conv_w", (cw, W), ("conv", "lru"), fan_in=cw)
+    pf.param("conv_b", (W,), ("lru",), init=zeros_init)
+    pf.param("gate_a_w", (nb, W // nb, W // nb),
+             ("lru_blocks", "lru_in", "lru_out"), fan_in=W // nb)
+    pf.param("gate_a_b", (W,), ("lru",), init=zeros_init)
+    pf.param("gate_x_w", (nb, W // nb, W // nb),
+             ("lru_blocks", "lru_in", "lru_out"), fan_in=W // nb)
+    pf.param("gate_x_b", (W,), ("lru",), init=zeros_init)
+    pf.param("lam", (W,), ("lru",), init=ones_init)
+    pf.param("w_out", (W, d), ("lru", "embed"), fan_in=W)
+
+
+def _blockdiag(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """u: (..., W) -> (..., W) via block-diagonal linear (nb blocks)."""
+    nb, bin_, bout = w.shape
+    shp = u.shape
+    ub = u.reshape(shp[:-1] + (nb, bin_))
+    out = jnp.einsum("...ni,nio->...no", ub, w.astype(u.dtype))
+    return out.reshape(shp[:-1] + (nb * bout,)) + b.astype(u.dtype)
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv; u (B,S,W), w (cw,W)."""
+    cw = w.shape[0]
+    out = u * w[-1].astype(u.dtype)
+    for i in range(1, cw):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :u.shape[1]]
+        out = out + shifted * w[cw - 1 - i].astype(u.dtype)
+    return out + b.astype(u.dtype)
+
+
+def _gates(p: Params, cfg: ModelConfig, u: jax.Array):
+    """Compute per-step decay a and input term b of the linear recurrence."""
+    r = jax.nn.sigmoid(_blockdiag(u, p["gate_a_w"], p["gate_a_b"]))
+    i = jax.nn.sigmoid(_blockdiag(u, p["gate_x_w"], p["gate_x_b"]))
+    log_a = (-LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a.astype(u.dtype), b.astype(u.dtype)
+
+
+def rglru_train(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = layers.rmsnorm(p["ln"], x, cfg.norm_eps)
+    cd = cfg.compute_dtype
+    u = h @ p["w_x"].astype(cd)
+    g = jax.nn.gelu(h @ p["w_gate"].astype(cd))
+    u = _causal_conv(u, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, cfg, u)
+    hseq, _ = ops.rglru(a, b)
+    out = (hseq * g) @ p["w_out"].astype(cd)
+    return x + out
+
+
+def rglru_prefill(p: Params, cfg: ModelConfig, x: jax.Array
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h = layers.rmsnorm(p["ln"], x, cfg.norm_eps)
+    cd = cfg.compute_dtype
+    u_in = h @ p["w_x"].astype(cd)
+    g = jax.nn.gelu(h @ p["w_gate"].astype(cd))
+    u = _causal_conv(u_in, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, cfg, u)
+    hseq, hfin = ops.rglru(a, b)
+    out = (hseq * g) @ p["w_out"].astype(cd)
+    cw = cfg.conv_width
+    conv_state = u_in[:, -(cw - 1):, :]                       # last cw-1 inputs
+    return x + out, {"h": hfin.astype(cd), "conv": conv_state}
+
+
+def rglru_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array], lengths: jax.Array
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, d). cache: h (B,W), conv (B,cw-1,W)."""
+    del lengths
+    h = layers.rmsnorm(p["ln"], x[:, None, :], cfg.norm_eps)[:, 0]
+    cd = cfg.compute_dtype
+    u_in = h @ p["w_x"].astype(cd)                            # (B,W)
+    g = jax.nn.gelu(h @ p["w_gate"].astype(cd))
+    w = p["conv_w"].astype(cd)
+    hist = jnp.concatenate([cache["conv"], u_in[:, None, :]], axis=1)
+    u = jnp.einsum("bcw,cw->bw", hist, w) + p["conv_b"].astype(cd)
+    a, b = _gates(p, cfg, u[:, None, :])
+    hnew, _ = ops.rglru_decode(a[:, 0], b[:, 0], cache["h"])
+    out = (hnew * g) @ p["w_out"].astype(cd)
+    return x + out, {"h": hnew.astype(cd), "conv": hist[:, 1:]}
+
+
+def rglru_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    del max_seq
+    W, cw = cfg.lru_width, cfg.conv_width
+    return {"h": jax.ShapeDtypeStruct((batch, W), cfg.compute_dtype),
+            "conv": jax.ShapeDtypeStruct((batch, cw - 1, W),
+                                         cfg.compute_dtype)}

@@ -1,0 +1,157 @@
+"""Mamba-2 block built on the SSD (state-space duality) scan.
+
+Block layout follows the Mamba-2 reference: in-proj produces
+[z, x, B, C, dt]; causal depthwise conv over [x, B, C]; SSD; gated RMSNorm;
+out-proj.  The SSD itself runs through ``repro.kernels.ops.ssd`` (chunked
+jnp oracle / Pallas TPU kernel).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .common import ModelConfig, ParamFactory, scaled_init, zeros_init, ones_init
+from . import layers
+
+Params = Dict[str, Any]
+
+
+def dims(cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    P = cfg.ssm_head_dim
+    H = di // P
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    return d, di, P, H, G, N
+
+
+def init_ssd_block(pf: ParamFactory, cfg: ModelConfig):
+    d, di, P, H, G, N = dims(cfg)
+    cw = cfg.conv_width
+    layers.init_rmsnorm(pf, "ln", d)
+    pf.param("wz", (d, di), ("embed", "ssm_inner"), fan_in=d)
+    pf.param("wx", (d, di), ("embed", "ssm_inner"), fan_in=d)
+    pf.param("wB", (d, G * N), ("embed", "ssm_bc"), fan_in=d)
+    pf.param("wC", (d, G * N), ("embed", "ssm_bc"), fan_in=d)
+    pf.param("wdt", (d, H), ("embed", "ssm_heads"), fan_in=d)
+    pf.param("conv_x", (cw, di), ("conv", "ssm_inner"), fan_in=cw)
+    pf.param("conv_B", (cw, G * N), ("conv", "ssm_bc"), fan_in=cw)
+    pf.param("conv_C", (cw, G * N), ("conv", "ssm_bc"), fan_in=cw)
+    pf.param("dt_bias", (H,), ("ssm_heads",), init=zeros_init)
+    pf.param("A_log", (H,), ("ssm_heads",), init=zeros_init)
+    pf.param("Dskip", (H,), ("ssm_heads",), init=ones_init)
+    pf.param("gnorm", (di,), ("ssm_inner",), init=ones_init)
+    pf.param("w_out", (di, d), ("ssm_inner", "embed"), fan_in=di)
+
+
+def _conv(u, w):
+    cw = w.shape[0]
+    out = u * w[-1].astype(u.dtype)
+    for i in range(1, cw):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :u.shape[1]]
+        out = out + shifted * w[cw - 1 - i].astype(u.dtype)
+    return out
+
+
+def _proj_inputs(p: Params, cfg: ModelConfig, h: jax.Array):
+    cd = cfg.compute_dtype
+    z = h @ p["wz"].astype(cd)
+    xs = h @ p["wx"].astype(cd)
+    Bm = h @ p["wB"].astype(cd)
+    Cm = h @ p["wC"].astype(cd)
+    dt = jax.nn.softplus(
+        (h @ p["wdt"].astype(cd)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return z, xs, Bm, Cm, dt
+
+
+def _gated_out(p: Params, cfg: ModelConfig, x, y, z):
+    cd = cfg.compute_dtype
+    y = layers.rmsnorm(p["gnorm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return x + y @ p["w_out"].astype(cd)
+
+
+def ssd_train(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    out, _ = _ssd_full(p, cfg, x)
+    return out
+
+
+def _ssd_full(p: Params, cfg: ModelConfig, x: jax.Array):
+    B, S, _ = x.shape
+    d, di, P, H, G, N = dims(cfg)
+    h = layers.rmsnorm(p["ln"], x, cfg.norm_eps)
+    z, xs_in, Bm_in, Cm_in, dt = _proj_inputs(p, cfg, h)
+    xs = jax.nn.silu(_conv(xs_in, p["conv_x"]))
+    Bm = jax.nn.silu(_conv(Bm_in, p["conv_B"]))
+    Cm = jax.nn.silu(_conv(Cm_in, p["conv_C"]))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = ops.ssd(
+        xs.reshape(B, S, H, P), dt, A,
+        Bm.reshape(B, S, G, N), Cm.reshape(B, S, G, N),
+        p["Dskip"], chunk=cfg.ssm_chunk, unroll=cfg.unroll_inner)
+    out = _gated_out(p, cfg, x, y.reshape(B, S, di), z)
+    cw = cfg.conv_width
+    cache = {
+        "state": state.astype(jnp.float32),
+        "conv_x": xs_in[:, -(cw - 1):],
+        "conv_B": Bm_in[:, -(cw - 1):],
+        "conv_C": Cm_in[:, -(cw - 1):],
+    }
+    return out, cache
+
+
+def ssd_prefill(p: Params, cfg: ModelConfig, x: jax.Array):
+    return _ssd_full(p, cfg, x)
+
+
+def ssd_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+               cache: Dict[str, jax.Array], lengths: jax.Array
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    del lengths
+    Bsz, _ = x.shape
+    d, di, P, H, G, N = dims(cfg)
+    h = layers.rmsnorm(p["ln"], x[:, None, :], cfg.norm_eps)[:, 0]
+    cd = cfg.compute_dtype
+    z = h @ p["wz"].astype(cd)
+    xs_in = h @ p["wx"].astype(cd)
+    Bm_in = h @ p["wB"].astype(cd)
+    Cm_in = h @ p["wC"].astype(cd)
+    dt = jax.nn.softplus(
+        (h @ p["wdt"].astype(cd)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                    # (B,H)
+
+    def step_conv(state, new, w):
+        hist = jnp.concatenate([state, new[:, None, :]], axis=1)
+        out = jnp.einsum("bcw,cw->bw", hist, w.astype(cd))
+        return out, hist[:, 1:]
+
+    xs, cx = step_conv(cache["conv_x"], xs_in, p["conv_x"])
+    Bm, cB = step_conv(cache["conv_B"], Bm_in, p["conv_B"])
+    Cm, cC = step_conv(cache["conv_C"], Cm_in, p["conv_C"])
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = ops.ssd_decode(
+        xs.reshape(Bsz, H, P), dt, A,
+        Bm.reshape(Bsz, G, N), Cm.reshape(Bsz, G, N),
+        p["Dskip"], cache["state"])
+    out = _gated_out(p, cfg, x[:, None, :], y.reshape(Bsz, 1, di),
+                     z[:, None, :])[:, 0]
+    return out, {"state": state, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+
+
+def ssd_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    del max_seq
+    d, di, P, H, G, N = dims(cfg)
+    cw = cfg.conv_width
+    return {
+        "state": jax.ShapeDtypeStruct((batch, H, P, N), jnp.float32),
+        "conv_x": jax.ShapeDtypeStruct((batch, cw - 1, di), cfg.compute_dtype),
+        "conv_B": jax.ShapeDtypeStruct((batch, cw - 1, G * N),
+                                       cfg.compute_dtype),
+        "conv_C": jax.ShapeDtypeStruct((batch, cw - 1, G * N),
+                                       cfg.compute_dtype),
+    }

@@ -1,0 +1,223 @@
+"""The RCP application wired onto the affinity runtime (paper §4.5, Table 1).
+
+Pools/keys/regexes follow Table 1 exactly:
+
+  pool          example key                step   regex                    affinity key
+  /frames       /frames/little3_42         MOT    /[a-zA-Z0-9]+_           /little3_
+  /states       /states/little3_42         -      /[a-zA-Z0-9]+_           /little3_
+  /positions    /positions/little3_7_42    PRED   /[a-zA-Z0-9]+_[0-9]+_    /little3_7_
+  /predictions  /predictions/little3_42_7  CD     /[a-zA-Z0-9]+_[0-9]+_    /little3_42_
+  /cd           /cd/little3_42_7           -      -                        -
+
+Layouts are written x/y/z = shards for MOT/PRED/CD (paper §4.4); placement
+strategy is either 'affinity' (grouped, shard-local execution) or 'random'
+(standard key-hash placement).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import CascadeStore
+from repro.runtime import (CLUSTER_NET, Compute, Get, NetProfile, Put,
+                           Runtime, ShardLocalScheduler)
+from repro.runtime.scheduler import Scheduler
+from .data import (FRAME_BYTES, P_HIST, POSITION_BYTES, PREDICTION_BYTES,
+                   Scene, make_scene)
+from .models import StageProfile
+
+FRAME_RE = r"/[a-zA-Z0-9]+_"
+ACTOR_RE = r"/[a-zA-Z0-9]+_[0-9]+_"
+
+
+@dataclasses.dataclass
+class Layout:
+    mot: int = 3           # shards for MOT
+    pred: int = 5
+    cd: int = 5
+    replication: int = 1
+
+    def __str__(self):
+        r = f" x{self.replication}" if self.replication > 1 else ""
+        return f"{self.mot}/{self.pred}/{self.cd}{r}"
+
+
+class FrameTracker:
+    def __init__(self):
+        self.sent: Dict[Tuple[str, int], float] = {}
+        self.expected: Dict[Tuple[str, int], int] = {}
+        self.done_count: Dict[Tuple[str, int], int] = defaultdict(int)
+        self.completed: Dict[Tuple[str, int], float] = {}
+
+    def frame_sent(self, vid: str, f: int, t: float, expected_cd: int):
+        self.sent[(vid, f)] = t
+        self.expected[(vid, f)] = expected_cd
+
+    def mot_done(self, vid: str, f: int, t: float):
+        if self.expected.get((vid, f), 0) == 0:
+            self.completed[(vid, f)] = t
+
+    def cd_done(self, vid: str, f: int, t: float):
+        key = (vid, f)
+        self.done_count[key] += 1
+        if self.done_count[key] >= self.expected.get(key, 1 << 30):
+            self.completed.setdefault(key, t)
+
+    def latencies(self, warmup: int = 100) -> List[float]:
+        out = []
+        for (vid, f), t_end in self.completed.items():
+            if f >= warmup and (vid, f) in self.sent:
+                out.append(t_end - self.sent[(vid, f)])
+        return out
+
+
+class RCPApp:
+    def __init__(self, scenes: List[Scene], layout: Layout,
+                 grouped: bool = True,
+                 scheduler: Optional[Scheduler] = None,
+                 net: NetProfile = CLUSTER_NET,
+                 profile: Optional[StageProfile] = None,
+                 caching: bool = True,
+                 seed: int = 0):
+        self.scenes = {s.name: s for s in scenes}
+        self.layout = layout
+        self.grouped = grouped
+        self.profile = profile or StageProfile()
+        self.tracker = FrameTracker()
+
+        # nodes: one physical server per shard slot (paper: 1 node/shard
+        # unless replication>1), GPU on MOT/PRED servers (config A), CD on
+        # config B (cpu).
+        r = layout.replication
+        self.mot_nodes = [f"mot{i}" for i in range(layout.mot * r)]
+        self.pred_nodes = [f"pred{i}" for i in range(layout.pred * r)]
+        self.cd_nodes = [f"cd{i}" for i in range(layout.cd * r)]
+        nodes = self.mot_nodes + self.pred_nodes + self.cd_nodes
+        store = CascadeStore(nodes)
+        store.cache_enabled = caching
+
+        regex = (lambda p: p) if grouped else (lambda p: None)
+        store.create_object_pool("/frames", self.mot_nodes, layout.mot,
+                                 replication=r,
+                                 affinity_set_regex=regex(FRAME_RE))
+        store.create_object_pool("/states", self.mot_nodes, layout.mot,
+                                 replication=r,
+                                 affinity_set_regex=regex(FRAME_RE))
+        store.create_object_pool("/positions", self.pred_nodes, layout.pred,
+                                 replication=r,
+                                 affinity_set_regex=regex(ACTOR_RE))
+        store.create_object_pool("/predictions", self.cd_nodes, layout.cd,
+                                 replication=r,
+                                 affinity_set_regex=regex(ACTOR_RE))
+        store.create_object_pool("/cd", self.cd_nodes, layout.cd,
+                                 replication=r)
+
+        resources = {}
+        for n in self.mot_nodes + self.pred_nodes:
+            resources[n] = {"gpu": 1, "cpu": 2, "nic": 2}
+        for n in self.cd_nodes:
+            resources[n] = {"gpu": 0, "cpu": 2, "nic": 2}
+
+        self.rt = Runtime(store, resources, net=net,
+                          scheduler=scheduler or ShardLocalScheduler(),
+                          seed=seed)
+        self.store = store
+
+        self.rt.register("/frames", self._mot_task,
+                         order_of=lambda k: k.split("/")[-1].rsplit("_", 1)[0],
+                         resource="gpu", pool_nodes=self.mot_nodes,
+                         name="MOT")
+        self.rt.register("/positions", self._pred_task,
+                         order_of=lambda k: k.split("/")[-1].rsplit("_", 1)[0],
+                         resource="gpu", pool_nodes=self.pred_nodes,
+                         name="PRED")
+        self.rt.register("/predictions", self._cd_task,
+                         order_of=lambda k: "_".join(
+                             k.split("/")[-1].split("_")[:2]),
+                         resource="cpu", pool_nodes=self.cd_nodes,
+                         name="CD")
+
+    # -- stage tasks (generator UDLs) ---------------------------------------
+
+    def _mot_task(self, ctx, key, value):
+        name = key.split("/")[-1]
+        vid, f_s = name.rsplit("_", 1)
+        f = int(f_s)
+        scene = self.scenes[vid]
+        if f > 0:
+            yield Get(f"/states/{vid}_{f - 1}", wait=True)
+        yield Compute("gpu", self.profile.mot)
+        yield Put(f"/states/{vid}_{f}", ("state", vid, f),
+                  size=scene.state_bytes(f))
+        self.tracker.mot_done(vid, f, ctx.now)
+        for a in scene.actors_in_frame(f):
+            yield Put(f"/positions/{vid}_{a}_{f}",
+                      tuple(scene.position(a, f)), size=POSITION_BYTES)
+
+    def _pred_task(self, ctx, key, value):
+        name = key.split("/")[-1]
+        vid, a_s, f_s = name.split("_")
+        a, f = int(a_s), int(f_s)
+        scene = self.scenes[vid]
+        have = 1
+        for i in range(f - P_HIST + 1, f):
+            if i < 0:
+                continue
+            v = yield Get(f"/positions/{vid}_{a}_{i}", required=False)
+            if v is not None:
+                have += 1
+        if have >= P_HIST:
+            yield Compute("gpu", self.profile.pred)
+            yield Put(f"/predictions/{vid}_{f}_{a}", ("traj", vid, f, a),
+                      size=PREDICTION_BYTES)
+
+    def _cd_task(self, ctx, key, value):
+        name = key.split("/")[-1]
+        vid, f_s, a_s = name.split("_")
+        f, a = int(f_s), int(a_s)
+        for other in self.predictable_actors(vid, f):
+            if other != a:
+                yield Get(f"/predictions/{vid}_{f}_{other}", required=False)
+        yield Compute("cpu", self.profile.cd)
+        yield Put(f"/cd/{vid}_{f}_{a}", ("cd", vid, f, a), size=128)
+        self.tracker.cd_done(vid, f, ctx.now)
+
+    # -- workload ----------------------------------------------------------------
+
+    def predictable_actors(self, vid: str, f: int) -> List[int]:
+        scene = self.scenes[vid]
+        return [a for a in scene.actors_in_frame(f)
+                if f - scene.enter[a] >= P_HIST - 1]
+
+    def stream(self, n_frames: Optional[int] = None) -> None:
+        for vid, scene in self.scenes.items():
+            F = min(n_frames or scene.n_frames, scene.n_frames)
+            for f in range(F):
+                t = f / scene.fps
+                self.tracker.frame_sent(
+                    vid, f, t, expected_cd=len(self.predictable_actors(vid, f)))
+                self.rt.client_put(t, f"/frames/{vid}_{f}",
+                                   ("frame", vid, f), size=FRAME_BYTES)
+
+    def run(self, until: float = float("inf")) -> None:
+        self.rt.run(until)
+
+    # -- results ------------------------------------------------------------------
+
+    def summary(self, warmup: int = 100) -> Dict[str, float]:
+        import numpy as np
+        lats = self.tracker.latencies(warmup=warmup)
+        if not lats:
+            return {"n": 0}
+        arr = np.array(lats)
+        return {
+            "n": len(arr),
+            "median": float(np.median(arr)),
+            "p75": float(np.percentile(arr, 75)),
+            "p95": float(np.percentile(arr, 95)),
+            "mean": float(arr.mean()),
+            "remote_gets": self.store.stats.remote_gets,
+            "local_gets": self.store.stats.local_gets,
+            "bytes_remote": self.store.stats.bytes_remote,
+        }

@@ -1,0 +1,81 @@
+"""Synthetic Stanford-Drone-like trajectory dataset.
+
+Scenes named after the paper's videos (little3 / hyang5 / gates3) with
+deterministic per-name actor trajectories: actors enter/leave, move with
+smoothed random-waypoint dynamics inside a unit intersection.  Object sizes
+follow the paper: ~8 MB uncompressed frames, state objects scaling with
+actor count (up to ~10 MB), 10s-of-bytes positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+FRAME_BYTES = 8 * 1024 * 1024          # paper §4.1
+STATE_BYTES_PER_ACTOR = 200 * 1024     # features+positions; 49 actors ~ 10MB
+POSITION_BYTES = 64                    # "10s of bytes"
+PREDICTION_BYTES = 640                 # q=12 waypoints + metadata
+P_HIST = 8                             # PRED needs p=8 past positions
+Q_PRED = 12                            # predicts q=12 future positions
+
+
+@dataclasses.dataclass
+class Scene:
+    name: str
+    n_frames: int
+    max_actors: int
+    fps: float = 2.5                   # paper: clients stream at 2.5 FPS
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(
+            abs(hash((self.name, self.seed))) % (2 ** 31))
+        A, F = self.max_actors, self.n_frames
+        # actor lifetimes
+        enter = rng.integers(0, max(F - 20, 1), A)
+        leave = np.minimum(enter + rng.integers(30, F, A), F)
+        # smoothed random-walk trajectories in [0,1]^2
+        pos = np.zeros((A, F, 2), np.float32)
+        vel = rng.normal(0, 0.004, (A, 2)).astype(np.float32)
+        pos[:, 0] = rng.uniform(0.1, 0.9, (A, 2))
+        for f in range(1, F):
+            vel = 0.95 * vel + rng.normal(0, 0.002, (A, 2))
+            pos[:, f] = np.clip(pos[:, f - 1] + vel, 0.0, 1.0)
+        self.enter, self.leave, self.pos = enter, leave, pos
+
+    def actors_in_frame(self, f: int) -> List[int]:
+        return [a for a in range(self.max_actors)
+                if self.enter[a] <= f < self.leave[a]]
+
+    def position(self, actor: int, f: int) -> np.ndarray:
+        return self.pos[actor, f]
+
+    def history(self, actor: int, f: int) -> np.ndarray:
+        """Last P_HIST positions ending at frame f (may be shorter)."""
+        start = max(self.enter[actor], f - P_HIST + 1)
+        return self.pos[actor, start:f + 1]
+
+    def frame_tensor(self, f: int, res: int = 64) -> np.ndarray:
+        """A small dense 'image' of the scene for the real-JAX MOT model."""
+        img = np.zeros((res, res, 3), np.float32)
+        for a in self.actors_in_frame(f):
+            x, y = (self.pos[a, f] * (res - 1)).astype(int)
+            img[y, x, a % 3] = 1.0
+        return img
+
+    def state_bytes(self, f: int) -> int:
+        return max(len(self.actors_in_frame(f)), 1) * STATE_BYTES_PER_ACTOR
+
+
+PAPER_SCENES = {
+    "little3": dict(max_actors=14, seed=3),
+    "hyang5": dict(max_actors=22, seed=5),
+    "gates3": dict(max_actors=49, seed=8),   # paper: up to 49 actors
+}
+
+
+def make_scene(name: str, n_frames: int = 700) -> Scene:
+    kw = PAPER_SCENES.get(name, dict(max_actors=20, seed=1))
+    return Scene(name=name, n_frames=n_frames, **kw)

@@ -1,0 +1,17 @@
+from .simulation import (AZURE_NET, CLUSTER_NET, Compute, Get, NetProfile,
+                         Node, Put, Simulator, Sleep, Trigger)
+from .scheduler import (LeastLoadedScheduler, RandomScheduler, Scheduler,
+                        ShardLocalScheduler)
+from .executor import Runtime, TaskContext
+from .faults import FaultInjector, set_straggler
+from .autoscale import AutoScaler, ScaleDecision
+
+__all__ = [
+    "AZURE_NET", "CLUSTER_NET", "Compute", "Get", "NetProfile", "Node",
+    "Put", "Simulator", "Sleep", "Trigger",
+    "LeastLoadedScheduler", "RandomScheduler", "Scheduler",
+    "ShardLocalScheduler",
+    "Runtime", "TaskContext",
+    "FaultInjector", "set_straggler",
+    "AutoScaler", "ScaleDecision",
+]

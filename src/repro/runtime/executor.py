@@ -1,0 +1,131 @@
+"""Runtime: wires store + simulator + scheduler + per-group sequencing.
+
+UDLs registered on the store are dispatched here when a put/trigger fires:
+the scheduler picks the executing node (shard-local under affinity
+grouping, pool-wide under the LB baselines), an application-supplied
+*order label* serializes tasks that must run in order (frames of one video,
+PRED steps of one actor), and straggler hedging optionally duplicates
+long-queued tasks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core import CascadeStore, GroupSequencer
+from repro.core.object_store import Shard, UDL
+from .simulation import (AZURE_NET, CLUSTER_NET, Compute, Get, NetProfile,
+                         Node, Put, Simulator, Sleep, Trigger)
+from .scheduler import Scheduler, ShardLocalScheduler
+
+
+@dataclasses.dataclass
+class TaskContext:
+    runtime: "Runtime"
+    node: str
+    key: str
+
+    @property
+    def now(self) -> float:
+        return self.runtime.sim.now
+
+
+@dataclasses.dataclass
+class UDLBinding:
+    udl: UDL
+    make_task: Callable[[TaskContext, str, Any], Any]   # -> generator
+    order_of: Optional[Callable[[str], str]] = None     # key -> order label
+    resource: str = "gpu"
+    pool_nodes: Sequence[str] = ()
+
+
+class Runtime:
+    def __init__(self, store: CascadeStore,
+                 node_resources: Optional[Dict[str, Dict[str, int]]] = None,
+                 net: NetProfile = CLUSTER_NET,
+                 scheduler: Optional[Scheduler] = None,
+                 seed: int = 0,
+                 hedge_after: Optional[float] = None):
+        resources = node_resources or {
+            n: {"gpu": 1, "cpu": 2, "nic": 2} for n in store.nodes}
+        self.nodes = {n: Node(n, r) for n, r in resources.items()}
+        self.sim = Simulator(store, self.nodes, net=net, seed=seed)
+        self.sim.udl_dispatch = self._dispatch
+        self.store = store
+        self.scheduler = scheduler or ShardLocalScheduler()
+        self.sequencer = GroupSequencer()
+        self.bindings: Dict[str, UDLBinding] = {}
+        self.hedge_after = hedge_after
+        self.hedges = 0
+        self.task_log: List[Dict[str, Any]] = []
+
+    # -- registration ----------------------------------------------------------
+
+    def register(self, prefix: str,
+                 make_task: Callable[[TaskContext, str, Any], Any],
+                 order_of: Optional[Callable[[str], str]] = None,
+                 resource: str = "gpu",
+                 pool_nodes: Optional[Sequence[str]] = None,
+                 name: str = "") -> None:
+        udl = UDL(prefix=prefix, fn=make_task, name=name or prefix)
+        self.store.register_udl(prefix, make_task, name=udl.name)
+        self.bindings[udl.name] = UDLBinding(
+            udl=udl, make_task=make_task, order_of=order_of,
+            resource=resource,
+            pool_nodes=tuple(pool_nodes or self.store.nodes))
+
+    # -- dispatch path ------------------------------------------------------------
+
+    def _dispatch(self, udl: UDL, shard: Shard, key: str, value: Any) -> None:
+        binding = self.bindings[udl.name]
+        if binding.order_of is not None:
+            label = f"{udl.name}::{binding.order_of(key)}"
+            self.sequencer.admit(label, (binding, shard, key, value))
+            item = self.sequencer.ready(label)
+            if item is not None:
+                self._launch(label, *item)
+        else:
+            self._launch(None, binding, shard, key, value)
+
+    def _launch(self, label: Optional[str], binding: UDLBinding, shard: Shard,
+                key: str, value: Any) -> None:
+        node = self.scheduler.pick(shard, key, self.nodes,
+                                   binding.pool_nodes)
+        ctx = TaskContext(runtime=self, node=node, key=key)
+        gen = binding.make_task(ctx, key, value)
+        t0 = self.sim.now
+
+        def done():
+            self.task_log.append({
+                "udl": binding.udl.name, "key": key, "node": node,
+                "t_start": t0, "t_end": self.sim.now,
+            })
+            if label is not None:
+                self.sequencer.complete(label)
+                nxt = self.sequencer.ready(label)
+                if nxt is not None:
+                    self._launch(label, *nxt)
+
+        self.sim.spawn(node, gen, done=done)
+
+    # -- client ingress --------------------------------------------------------------
+
+    def client_put(self, at: float, key: str, value: Any = None,
+                   size: int = 0, client_node: str = "client") -> None:
+        """Schedule an external put at simulated time `at`."""
+        def fire():
+            shard, udls = self.store.put(key, value, size=size)
+            dt = self.sim.net.transfer_time(size)
+
+            def delivered():
+                if key in self.sim._waiters:
+                    for wnode, wop, wcont in self.sim._waiters.pop(key):
+                        self.sim._execute(wnode, wop, wcont)
+                for u in udls:
+                    self._dispatch(u, shard, key, value)
+            self.sim.after(dt, delivered)
+        self.sim.at(at, fire)
+
+    def run(self, until: float = float("inf")) -> None:
+        self.sim.run(until)

@@ -1,0 +1,86 @@
+"""Fault injection + tolerance: node failures, shard failover, stragglers.
+
+Failure semantics mirror a replicated Cascade deployment:
+  * when a node dies, its queued tasks are re-dispatched to surviving shard
+    members (replication >= 2) or stall until recovery (replication == 1 —
+    objects are memory-resident, so an unreplicated shard is unavailable);
+  * stragglers are modeled as per-node service-speed multipliers; hedged
+    execution re-issues a task to a second shard member when it has waited
+    in queue beyond `hedge_after` seconds, first completion wins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .executor import Runtime
+from .simulation import Node
+
+
+@dataclasses.dataclass
+class FailureEvent:
+    node: str
+    t_down: float
+    t_up: float
+
+
+class FaultInjector:
+    def __init__(self, runtime: Runtime):
+        self.rt = runtime
+        self.events: List[FailureEvent] = []
+
+    def fail_node(self, node: str, at: float, duration: float) -> None:
+        ev = FailureEvent(node=node, t_down=at, t_up=at + duration)
+        self.events.append(ev)
+        self.rt.sim.at(at, lambda: self._down(ev))
+        self.rt.sim.at(ev.t_up, lambda: self._up(ev))
+
+    def _down(self, ev: FailureEvent) -> None:
+        node = self.rt.nodes[ev.node]
+        node.up = False
+        # re-dispatch queued work to surviving shard members
+        for resource, q in list(node.queues.items()):
+            stranded = list(q)
+            q.clear()
+            for enq, fn in stranded:
+                target = self._failover_target(ev.node)
+                if target is None:
+                    # no replica: stall until recovery
+                    node.queues[resource].append((enq, fn))
+                else:
+                    self.rt.sim.acquire(self.rt.nodes[target], resource, fn,
+                                        enq_time=enq)
+
+    def _up(self, ev: FailureEvent) -> None:
+        node = self.rt.nodes[ev.node]
+        node.up = True
+        # drain anything that stalled while down
+        for resource in list(node.queues):
+            while (node.queues[resource]
+                   and node.in_use[resource] < node.capacity.get(resource, 1)):
+                enq, fn = node.queues[resource].popleft()
+                node.in_use[resource] += 1
+                node.queue_wait += self.rt.sim.now - enq
+                fn()
+
+    def _failover_target(self, failed: str) -> Optional[str]:
+        # a surviving member of any shard containing the failed node
+        for pool in self.rt.store.pools.values():
+            for shard in pool.shards.values():
+                if failed in shard.nodes:
+                    for n in shard.nodes:
+                        if n != failed and self.rt.nodes[n].up:
+                            return n
+        return None
+
+
+def set_straggler(runtime: Runtime, node: str, speed: float) -> None:
+    """speed < 1.0 slows the node's compute (e.g. 0.5 = 2x slower)."""
+    runtime.nodes[node].speed = speed
+
+
+@dataclasses.dataclass
+class AvailabilityReport:
+    downtime: float
+    tasks_failed_over: int
+    tasks_stalled: int

@@ -1,0 +1,78 @@
+"""Task scheduling policies: which node executes a triggered task.
+
+Under affinity grouping the home *shard* is fixed by the placement engine
+(data and compute collocate); the scheduler only picks among the shard's
+member nodes.  The baseline policies mirror the systems the paper compares
+against: random spray over a whole pool (cloud load balancer) and
+least-loaded (queue-depth aware LB).
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.object_store import Shard
+from .simulation import Node
+
+
+class Scheduler:
+    def pick(self, shard: Shard, key: str, nodes: Dict[str, Node],
+             pool_nodes: Sequence[str]) -> str:
+        raise NotImplementedError
+
+    def name(self) -> str:
+        return type(self).__name__
+
+
+class ShardLocalScheduler(Scheduler):
+    """Affinity mode: run on a member of the key's home shard (paper §4.3).
+
+    Round-robins across shard members (relevant when replication > 1).
+    """
+
+    def __init__(self):
+        self._rr: Dict[str, int] = {}
+
+    def pick(self, shard, key, nodes, pool_nodes):
+        up = [n for n in shard.nodes if nodes[n].up]
+        members = up or shard.nodes
+        i = self._rr.get(shard.name, 0)
+        self._rr[shard.name] = i + 1
+        return members[i % len(members)]
+
+    def name(self):
+        return "affinity"
+
+
+class RandomScheduler(Scheduler):
+    """Cloud-LB baseline: random spray over the pool, ignoring data homes."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+
+    def pick(self, shard, key, nodes, pool_nodes):
+        up = [n for n in pool_nodes if nodes[n].up]
+        return self.rng.choice(up or list(pool_nodes))
+
+    def name(self):
+        return "random"
+
+
+class LeastLoadedScheduler(Scheduler):
+    """Queue-aware LB baseline (still data-oblivious)."""
+
+    def __init__(self, resource: str = "gpu"):
+        self.resource = resource
+
+    def pick(self, shard, key, nodes, pool_nodes):
+        up = [n for n in pool_nodes if nodes[n].up]
+        cand = up or list(pool_nodes)
+
+        def load(n):
+            node = nodes[n]
+            return (len(node.queues[self.resource])
+                    + node.in_use[self.resource])
+        return min(cand, key=load)
+
+    def name(self):
+        return "least_loaded"

@@ -1,0 +1,263 @@
+"""Discrete-event cluster simulation that executes real stage logic.
+
+The paper's evaluation (17-server RDMA cluster / Azure) is reproduced with a
+DES whose primitives are the ones that determine placement behavior:
+
+  * nodes with FIFO *resources* (gpu, cpu, nic) and service queues,
+  * links with bandwidth + RTT (cluster and cloud profiles),
+  * the affinity-grouped CascadeStore for placement/caching,
+  * UDL tasks written as python *generators* yielding ops
+    (Get / Put / Trigger / Compute / Sleep) — the sim advances virtual time
+    around them, so the RCP application code reads like the paper's
+    pseudo-code while queueing/transfer effects are modeled faithfully.
+
+Node failures, stragglers (per-node slowdown factors) and hedged retries are
+injectable (see repro.runtime.faults).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import random
+from collections import defaultdict, deque
+from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
+
+from repro.core import CascadeStore
+
+
+# ---------------------------------------------------------------------------
+# Network / hardware profiles
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NetProfile:
+    bandwidth: float          # bytes/s
+    rtt: float                # seconds per transfer
+    store_latency: float = 0.0   # extra per remote storage op (cloud)
+
+    def transfer_time(self, nbytes: int) -> float:
+        return self.rtt + self.store_latency + nbytes / self.bandwidth
+
+
+# paper §4.4: 100 Gbps RDMA backbone, PTP-synced cluster
+CLUSTER_NET = NetProfile(bandwidth=12.5e9, rtt=10e-6)
+# paper §5: Azure — EH/blob/cosmos hops, ~10 Gbps effective, ms-scale RTTs
+AZURE_NET = NetProfile(bandwidth=1.25e9, rtt=1e-3, store_latency=4e-3)
+
+
+# ---------------------------------------------------------------------------
+# Ops yielded by task generators
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Get:
+    key: str
+    required: bool = True
+    wait: bool = False        # True: block until the key is put
+
+
+@dataclasses.dataclass
+class Put:
+    key: str
+    value: Any = None
+    size: int = 0
+    fire: bool = True         # trigger downstream UDLs
+
+
+@dataclasses.dataclass
+class Trigger:
+    key: str
+    value: Any = None
+    size: int = 0
+
+
+@dataclasses.dataclass
+class Compute:
+    resource: str             # "gpu" | "cpu"
+    seconds: float
+
+
+@dataclasses.dataclass
+class Sleep:
+    seconds: float
+
+
+TaskGen = Generator[Any, Any, None]
+
+
+# ---------------------------------------------------------------------------
+# Node model
+# ---------------------------------------------------------------------------
+
+class Node:
+    def __init__(self, name: str, resources: Dict[str, int],
+                 speed: float = 1.0):
+        self.name = name
+        self.capacity = dict(resources)           # resource -> lanes
+        self.in_use: Dict[str, int] = defaultdict(int)
+        self.queues: Dict[str, deque] = defaultdict(deque)
+        self.speed = speed                        # <1.0 => straggler
+        self.up = True
+        # metrics
+        self.busy_time: Dict[str, float] = defaultdict(float)
+        self.n_tasks = 0
+        self.queue_wait: float = 0.0
+
+    def __repr__(self):
+        return f"Node({self.name})"
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+
+class Simulator:
+    def __init__(self, store: CascadeStore, nodes: Dict[str, Node],
+                 net: NetProfile = CLUSTER_NET, seed: int = 0,
+                 local_get_cost: float = 2e-6):
+        self.store = store
+        self.nodes = nodes
+        self.net = net
+        self.now = 0.0
+        self.rng = random.Random(seed)
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self.local_get_cost = local_get_cost
+        # task bookkeeping
+        self.completed_tasks = 0
+        self.events_fired = 0
+        self.metrics: Dict[str, Any] = defaultdict(list)
+        self.udl_dispatch: Optional[Callable] = None  # set by Runtime
+        self._waiters: Dict[str, List[Tuple[Node, Any, Callable]]] = \
+            defaultdict(list)
+
+    # -- event loop ---------------------------------------------------------
+
+    def at(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (max(t, self.now), next(self._seq), fn))
+
+    def after(self, dt: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + dt, fn)
+
+    def run(self, until: float = float("inf")) -> None:
+        while self._heap:
+            t, _, fn = heapq.heappop(self._heap)
+            if t > until:
+                self.now = until
+                return
+            self.now = t
+            self.events_fired += 1
+            fn()
+
+    # -- resources ------------------------------------------------------------
+
+    def acquire(self, node: Node, resource: str, fn: Callable[[], None],
+                enq_time: Optional[float] = None) -> None:
+        enq = self.now if enq_time is None else enq_time
+        if not node.up:
+            # node down: park in queue; failover logic re-dispatches
+            node.queues[resource].append((enq, fn))
+            return
+        if node.in_use[resource] < node.capacity.get(resource, 1):
+            node.in_use[resource] += 1
+            node.queue_wait += self.now - enq
+            fn()
+        else:
+            node.queues[resource].append((enq, fn))
+
+    def release(self, node: Node, resource: str) -> None:
+        node.in_use[resource] -= 1
+        q = node.queues[resource]
+        while q and node.up:
+            enq, fn = q.popleft()
+            node.in_use[resource] += 1
+            node.queue_wait += self.now - enq
+            fn()
+            return
+
+    # -- task execution ---------------------------------------------------------
+
+    def spawn(self, node_name: str, gen: TaskGen, done: Optional[Callable] = None,
+              label: str = "") -> None:
+        """Run a generator task on a node, advancing sim time per op."""
+        node = self.nodes[node_name]
+        node.n_tasks += 1
+
+        def step(send_value=None):
+            try:
+                op = gen.send(send_value)
+            except StopIteration:
+                self.completed_tasks += 1
+                if done is not None:
+                    done()
+                return
+            self._execute(node, op, step)
+
+        step(None)
+
+    def _execute(self, node: Node, op: Any, cont: Callable[[Any], None]):
+        if isinstance(op, Compute):
+            dur = op.seconds / max(node.speed, 1e-9)
+
+            def start():
+                def finish():
+                    node.busy_time[op.resource] += dur
+                    self.release(node, op.resource)
+                    cont(None)
+                self.after(dur, finish)
+            self.acquire(node, op.resource, start)
+
+        elif isinstance(op, Sleep):
+            self.after(op.seconds, lambda: cont(None))
+
+        elif isinstance(op, Get):
+            rec, local = self.store.get(op.key, node=node.name)
+            if rec is None:
+                if op.wait:
+                    self._waiters[op.key].append((node, op, cont))
+                    return
+                if op.required:
+                    raise KeyError(f"missing object {op.key} at t={self.now}")
+                self.after(self.local_get_cost, lambda: cont(None))
+                return
+            if local:
+                self.after(self.local_get_cost, lambda: cont(rec.value))
+            else:
+                dt = self.net.transfer_time(rec.size)
+
+                def start_xfer():
+                    def finish():
+                        self.release(node, "nic")
+                        cont(rec.value)
+                    self.after(dt, finish)
+                self.acquire(node, "nic", start_xfer)
+
+        elif isinstance(op, (Put, Trigger)):
+            fire = isinstance(op, Trigger) or op.fire
+            if isinstance(op, Put):
+                shard, udls = self.store.put(op.key, op.value, size=op.size,
+                                             fire=fire)
+                # replication cost: object ships to every member not local
+                remote = [n for n in shard.nodes if n != node.name]
+                dt = self.net.transfer_time(op.size) if remote else \
+                    self.local_get_cost
+            else:
+                shard, udls = self.store.trigger(op.key, op.value,
+                                                 size=op.size)
+                remote = [n for n in shard.nodes if n != node.name]
+                dt = self.net.transfer_time(op.size) if remote else \
+                    self.local_get_cost
+
+            def delivered():
+                if isinstance(op, Put) and op.key in self._waiters:
+                    for wnode, wop, wcont in self._waiters.pop(op.key):
+                        self._execute(wnode, wop, wcont)
+                if fire and udls and self.udl_dispatch is not None:
+                    for u in udls:
+                        self.udl_dispatch(u, shard, op.key, op.value)
+                cont(None)
+            self.after(dt, delivered)
+
+        else:
+            raise TypeError(f"unknown op {op!r}")

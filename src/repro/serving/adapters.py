@@ -1,0 +1,70 @@
+"""LoRA adapter store with affinity grouping (paper §7.2's LoRA example).
+
+Adapters are LM-head LoRA deltas: logits += (h @ A) @ B * scale.  They are
+data objects in the store sense — each has an affinity key (its own id), so
+sessions using adapter `a` can be routed to rows where `a` is resident
+('adapter_affinity' policy); baselines fetch the adapter on first use per
+row (transfer cost = adapter bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class LoRAAdapter:
+    name: str
+    A: jax.Array        # (d_model, r)
+    B: jax.Array        # (r, vocab)
+    scale: float = 1.0
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.A.size * self.A.dtype.itemsize
+                   + self.B.size * self.B.dtype.itemsize)
+
+
+def make_adapter(rng: jax.Array, name: str, d_model: int, vocab: int,
+                 rank: int = 8, dtype=jnp.float32) -> LoRAAdapter:
+    k1, k2 = jax.random.split(rng)
+    return LoRAAdapter(
+        name=name,
+        A=(jax.random.normal(k1, (d_model, rank)) * 0.02).astype(dtype),
+        B=jnp.zeros((rank, vocab), dtype),   # standard LoRA init: B=0
+        scale=1.0)
+
+
+def apply_adapter(logits: jax.Array, hidden: jax.Array,
+                  adapter: LoRAAdapter) -> jax.Array:
+    delta = (hidden.astype(adapter.A.dtype) @ adapter.A) @ adapter.B
+    return logits + adapter.scale * delta.astype(logits.dtype)
+
+
+class AdapterStore:
+    """Tracks which rows hold which adapters; charges fetch bytes on miss."""
+
+    def __init__(self, n_rows: int):
+        self.adapters: Dict[str, LoRAAdapter] = {}
+        self.resident: Dict[int, Set[str]] = {r: set() for r in range(n_rows)}
+        self.fetches = 0
+        self.bytes_fetched = 0
+
+    def register(self, adapter: LoRAAdapter) -> None:
+        self.adapters[adapter.name] = adapter
+
+    def ensure_resident(self, row: int, name: Optional[str]) -> int:
+        """Returns bytes that had to be fetched to make `name` resident."""
+        if name is None or name in self.resident[row]:
+            return 0
+        ad = self.adapters[name]
+        self.resident[row].add(name)
+        self.fetches += 1
+        self.bytes_fetched += ad.nbytes
+        return ad.nbytes
+
+    def get(self, name: str) -> LoRAAdapter:
+        return self.adapters[name]

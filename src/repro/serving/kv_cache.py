@@ -1,0 +1,54 @@
+"""KV-cache utilities: slot packing, prefill->slot merge, byte accounting.
+
+A serving *row* (one data-parallel replica group) owns a slotted decode
+cache: every leaf has layout (layers, slots, ...).  Prefill produces a
+single-sequence cache (layers, 1, S, ...) that is written into a slot; when
+a session migrates between rows (the baseline policies do this; affinity
+routing avoids it) the slot state is extracted and shipped.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def session_cache_bytes(model, max_seq: int) -> int:
+    """Bytes of one session's decode state (the migration payload)."""
+    spec = model.cache_spec(1, max_seq)
+    return sum(
+        int(jnp.prod(jnp.array(x.shape))) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(spec))
+
+
+@functools.partial(jax.jit, static_argnames=("slot",), donate_argnums=(0,))
+def write_slot(row_cache: Any, prefill_cache: Any, slot: int) -> Any:
+    """Write a (L,1,...) prefill cache into slot `slot` of (L,B,...)."""
+    def merge(dst, src):
+        src = src.astype(dst.dtype)
+        # align trailing dims: src may be shorter in the seq dim
+        idx = [slice(None), slice(slot, slot + 1)]
+        idx += [slice(0, s) for s in src.shape[2:]]
+        return dst.at[tuple(idx)].set(src)
+    return jax.tree_util.tree_map(merge, row_cache, prefill_cache)
+
+
+@functools.partial(jax.jit, static_argnames=("slot",))
+def read_slot(row_cache: Any, slot: int) -> Any:
+    """Extract one slot's state (L,1,...) — the migration payload."""
+    return jax.tree_util.tree_map(
+        lambda x: x[:, slot:slot + 1], row_cache)
+
+
+@functools.partial(jax.jit, static_argnames=("slot",), donate_argnums=(0,))
+def clear_slot(row_cache: Any, slot: int) -> Any:
+    def z(dst):
+        return dst.at[:, slot].set(jnp.zeros_like(dst[:, slot]))
+    return jax.tree_util.tree_map(z, row_cache)

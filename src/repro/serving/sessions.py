@@ -1,0 +1,57 @@
+"""Session registry + affinity routing for the serving engine.
+
+Paper §7.2 applied: a session's decode state (KV cache / SSM state / LRU
+state) and its LoRA adapter are *data objects*; each decode request is a
+*task*.  One affinity function covers both: requests and state share the
+session's affinity key, so the placement engine sends every turn of a
+session to the row that already holds its state.  Baselines (random /
+least-loaded) are exactly the cloud load-balancer patterns of paper §5 and
+pay a state-migration penalty whenever the row changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core import (CallableAffinity, Descriptor, PlacementEngine,
+                        stable_hash)
+
+
+@dataclasses.dataclass
+class Session:
+    sid: str
+    adapter: Optional[str] = None
+    row: Optional[int] = None        # current home row
+    slot: Optional[int] = None
+    length: int = 0                  # tokens in decode state
+    turns: int = 0
+    migrations: int = 0
+    migrated_bytes: int = 0
+
+
+class SessionRouter:
+    """policy: 'affinity' | 'adapter_affinity' | 'random' | 'least_loaded'"""
+
+    def __init__(self, n_rows: int, policy: str = "affinity", seed: int = 0):
+        self.n_rows = n_rows
+        self.policy = policy
+        self._rr = stable_hash(str(seed))
+
+        def fn(desc: Descriptor):
+            if policy == "affinity":
+                return desc.get("sid")
+            if policy == "adapter_affinity":
+                return desc.get("adapter") or desc.get("sid")
+            return None   # random baseline: hash the unique request key
+
+        self.engine = PlacementEngine(
+            [str(i) for i in range(n_rows)],
+            affinity_fn=CallableAffinity(fn, name=policy))
+
+    def route(self, session: Session, request_id: str,
+              row_loads: Optional[List[int]] = None) -> int:
+        if self.policy == "least_loaded" and row_loads is not None:
+            return min(range(self.n_rows), key=lambda r: row_loads[r])
+        desc = Descriptor.of(f"/requests/{request_id}", kind="task",
+                             sid=session.sid, adapter=session.adapter)
+        return int(self.engine.place(desc).shard)

@@ -1,0 +1,9 @@
+from .optimizer import AdamWConfig, adamw_update, init_opt_state, lr_at
+from .data import DataConfig, TokenPipeline
+from . import checkpointing
+from .train_loop import TrainConfig, Trainer
+from . import compression
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "lr_at",
+           "DataConfig", "TokenPipeline", "checkpointing", "TrainConfig",
+           "Trainer", "compression"]

@@ -1,0 +1,115 @@
+"""AdamW in pure JAX, with optional low-precision optimizer states.
+
+For the >=100B-param MoE archs the second/first moments are stored bf16
+(``cfg.opt_state_dtype``) so params+moments fit the 16 GB/chip HBM budget of
+the single-pod mesh — a distributed-optimization trick recorded in
+EXPERIMENTS.md §Dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    factored: bool = False    # Adafactor-style factored 2nd moment for
+    #                           >=2D tensors: v ~ outer(row, col) / mean.
+    #                           O(n) -> O(rows+cols) state; lets the 770B
+    #                           llama4 fit 16 GB/chip on the single pod.
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def _factorable(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def init_opt_state(params: Any, state_dtype=jnp.float32,
+                   factored: bool = False) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+
+    def v_like(p):
+        if factored and _factorable(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return zeros(p)
+
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(v_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, params: Any,
+                 opt_state: Dict[str, Any]
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = opt_state["step"] + 1
+    stepf = step.astype(jnp.float32)
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    sdt = jax.tree_util.tree_leaves(opt_state["m"])[0].dtype
+
+    def upd(g, p, m, v):
+        gf = g.astype(jnp.float32) * scale
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        mhat = mf / (1 - cfg.b1 ** stepf)
+        g2 = gf * gf
+        if isinstance(v, dict):           # factored second moment
+            vr = cfg.b2 * v["vr"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+            vc = cfg.b2 * v["vc"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            vf = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g2
+            new_v = vf.astype(sdt)
+        vhat = vf / (1 - cfg.b2 ** stepf)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (delta + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), mf.astype(sdt), new_v
+
+    is_v_leaf = lambda x: isinstance(x, dict) and set(x) == {"vr", "vc"}
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_p = treedef.flatten_up_to(params)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = jax.tree_util.tree_flatten(
+        opt_state["v"], is_leaf=is_v_leaf)[0]
+    out = [upd(g, p, m, v)
+           for g, p, m, v in zip(flat_g, flat_p, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,16 @@
+import os
+import sys
+from pathlib import Path
+
+# Tests run on the single host CPU device (the 512-device override lives
+# ONLY in repro.launch.dryrun).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

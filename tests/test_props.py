@@ -1,0 +1,101 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import re
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Descriptor, HashPlacement, RegexAffinity,
+                        RendezvousPlacement, GroupSequencer, stable_hash)
+from repro.training import compression
+from repro.training.data import DataConfig, TokenPipeline
+
+import jax.numpy as jnp
+
+KEYS = st.from_regex(r"/[a-z][a-z0-9]{0,6}_[0-9]{1,3}_[0-9]{1,3}",
+                     fullmatch=True)
+SHARDS = st.integers(min_value=1, max_value=32)
+
+
+@given(KEYS, SHARDS)
+@settings(max_examples=100, deadline=None)
+def test_collocation_invariant(key, n_shards):
+    """Objects sharing an affinity key ALWAYS share a shard — any layout."""
+    fn = RegexAffinity(r"/[a-z0-9]+_[0-9]+_")
+    shards = [f"s{i}" for i in range(n_shards)]
+    pol = HashPlacement()
+    label = fn(Descriptor.of(key))
+    assert label is not None
+    # any other key with the same matched prefix maps to the same shard
+    suffix_variant = key.rsplit("_", 1)[0] + "_999"
+    label2 = fn(Descriptor.of(suffix_variant))
+    assert label == label2
+    assert pol.place(label, shards) == pol.place(label2, shards)
+
+
+@given(st.lists(st.text(alphabet="abcdef0123456789", min_size=1,
+                        max_size=12), min_size=1, max_size=50, unique=True),
+       st.integers(min_value=2, max_value=16))
+@settings(max_examples=50, deadline=None)
+def test_rendezvous_only_moves_to_new_shard(labels, n):
+    """Elasticity invariant: adding a shard never moves a group laterally."""
+    pol = RendezvousPlacement()
+    old = [f"s{i}" for i in range(n)]
+    new = old + ["s_new"]
+    for lbl in labels:
+        before, after = pol.place(lbl, old), pol.place(lbl, new)
+        assert after == before or after == "s_new"
+
+
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_stable_hash_deterministic(x):
+    s = f"key_{x}"
+    assert stable_hash(s) == stable_hash(s)
+    assert 0 <= stable_hash(s) < 2 ** 64
+
+
+@given(st.lists(st.tuples(st.sampled_from("abc"), st.integers(0, 100)),
+                min_size=1, max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_sequencer_per_group_fifo(items):
+    """Completion order within each group == admission order."""
+    seq = GroupSequencer()
+    for g, v in items:
+        seq.admit(g, v)
+    seen = {g: [] for g, _ in items}
+    progress = True
+    while progress:
+        progress = False
+        for g in seen:
+            item = seq.ready(g)
+            if item is not None:
+                seen[g].append(item)
+                seq.complete(g)
+                progress = True
+    for g in seen:
+        want = [v for gg, v in items if gg == g]
+        assert seen[g] == want
+
+
+@given(st.lists(st.floats(min_value=-100, max_value=100,
+                          allow_nan=False), min_size=1, max_size=256))
+@settings(max_examples=50, deadline=None)
+def test_int8_quantization_error_bound(xs):
+    x = jnp.asarray(np.array(xs, np.float32))
+    q, s = compression.quantize_int8(x)
+    err = np.abs(np.asarray(compression.dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-5
+
+
+@given(st.integers(min_value=0, max_value=500),
+       st.integers(min_value=1, max_value=4))
+@settings(max_examples=25, deadline=None)
+def test_data_pipeline_restart_property(step, dp_rank):
+    cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=8, seed=1,
+                     dp_rank=dp_rank % 2, dp_size=2)
+    p = TokenPipeline(cfg)
+    p.restore({"step": step})
+    b1 = p.next_batch()
+    p2 = TokenPipeline(cfg)
+    p2.restore({"step": step})
+    np.testing.assert_array_equal(b1["tokens"], p2.next_batch()["tokens"])

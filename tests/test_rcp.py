@@ -1,0 +1,126 @@
+"""RCP application: stage-model correctness + the paper's §4.6 claims."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.pipelines.rcp.app import Layout, RCPApp
+from repro.pipelines.rcp.data import P_HIST, Q_PRED, make_scene
+from repro.pipelines.rcp import models as rcp_models
+from repro.runtime.scheduler import RandomScheduler
+
+
+# -- stage models -------------------------------------------------------------
+
+def test_pred_shapes(rng):
+    params = rcp_models.init_pred(jax.random.PRNGKey(0))
+    hist = jnp.asarray(rng.normal(size=(P_HIST, 2)), jnp.float32)
+    out = rcp_models.pred_trajectory(params, hist)
+    assert out.shape == (Q_PRED, 2)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_cd_detects_crossing():
+    # two straight trajectories crossing at the middle
+    t = jnp.linspace(0, 1, Q_PRED)
+    a = jnp.stack([t, t], axis=1)                      # diagonal up
+    b = jnp.stack([t, 1.0 - t], axis=1)                # diagonal down
+    c = jnp.stack([t, t + 10.0], axis=1)               # far away
+    trajs = jnp.stack([b, c])
+    valid = jnp.array([True, True])
+    out = rcp_models.cd_collisions(a, trajs, valid)
+    assert bool(out[0]) and not bool(out[1])
+
+
+def test_mot_reidentifies_nearest(rng):
+    params = rcp_models.init_mot(jax.random.PRNGKey(0))
+    frame = jnp.zeros((64, 64, 3))
+    prev = jnp.zeros((64, 2)).at[0].set(jnp.array([0.5, 0.5]))
+    prev_valid = jnp.zeros((64,), bool).at[0].set(True)
+    det = jnp.zeros((64, 2)).at[0].set(jnp.array([0.51, 0.5]))
+    det_valid = jnp.zeros((64,), bool).at[0].set(True)
+    ids, feats = rcp_models.mot_detect(params, frame, prev, prev_valid,
+                                       det, det_valid)
+    assert int(ids[0]) == 0          # matched to previous actor 0
+    assert feats.shape[0] == 64
+
+
+def test_scene_determinism():
+    s1, s2 = make_scene("gates3", 100), make_scene("gates3", 100)
+    np.testing.assert_array_equal(s1.pos, s2.pos)
+    assert s1.actors_in_frame(50) == s2.actors_in_frame(50)
+
+
+# -- paper claims (§4.6) -----------------------------------------------------
+
+def run_app(grouped, layout=Layout(3, 5, 5), caching=True, n_frames=150,
+            scenes=("gates3",), replication=None):
+    lay = layout if replication is None else Layout(
+        layout.mot, layout.pred, layout.cd, replication)
+    app = RCPApp([make_scene(s, n_frames) for s in scenes], lay,
+                 grouped=grouped,
+                 scheduler=None if grouped else RandomScheduler(0),
+                 caching=caching)
+    app.stream()
+    app.run()
+    return app.summary(warmup=40)
+
+
+def test_affinity_zero_remote_gets():
+    s = run_app(grouped=True)
+    assert s["remote_gets"] == 0
+
+
+def test_affinity_beats_random():
+    sa = run_app(grouped=True)
+    sr = run_app(grouped=False)
+    assert sa["median"] <= sr["median"] * 1.05
+    assert sa["p95"] <= sr["p95"]
+    assert sr["remote_gets"] > 0
+
+
+def test_no_cache_hurts_random_not_affinity():
+    """Paper Fig. 5: disabling caching collapses random placement only."""
+    sa_c = run_app(grouped=True, caching=True)
+    sa_n = run_app(grouped=True, caching=False)
+    sr_c = run_app(grouped=False, caching=True)
+    sr_n = run_app(grouped=False, caching=False)
+    # affinity: local gets make caching irrelevant (zero-copy claim)
+    assert abs(sa_n["median"] - sa_c["median"]) < 0.02
+    # random: no cache -> every reuse refetches
+    assert sr_n["bytes_remote"] > sr_c["bytes_remote"]
+    assert sr_n["median"] >= sr_c["median"]
+
+
+def test_scale_out_no_remote_growth_under_affinity():
+    """Paper: adding shards grows random's misses, never affinity's."""
+    small_a = run_app(grouped=True, layout=Layout(1, 3, 3))
+    big_a = run_app(grouped=True, layout=Layout(3, 5, 5))
+    small_r = run_app(grouped=False, layout=Layout(1, 3, 3))
+    big_r = run_app(grouped=False, layout=Layout(3, 5, 5))
+    assert small_a["remote_gets"] == big_a["remote_gets"] == 0
+    assert big_r["remote_gets"] >= small_r["remote_gets"]
+
+
+def test_three_clients_affinity_stays_low():
+    """Paper Fig. 4: 3 simultaneous clients."""
+    sa = run_app(grouped=True, scenes=("little3", "hyang5", "gates3"),
+                 n_frames=120)
+    sr = run_app(grouped=False, scenes=("little3", "hyang5", "gates3"),
+                 n_frames=120)
+    assert sa["n"] > 0 and sr["n"] > 0
+    assert sa["median"] <= sr["median"] * 1.05
+    assert sa["p95"] <= sr["p95"] * 1.05
+
+
+def test_frames_processed_in_order():
+    app = RCPApp([make_scene("little3", 60)], Layout(2, 2, 2), grouped=True)
+    app.stream()
+    app.run()
+    mot_ends = [(r["key"], r["t_end"]) for r in app.rt.task_log
+                if r["udl"] == "MOT"]
+    frames = [int(k.split("_")[-1]) for k, _ in mot_ends]
+    ends = [t for _, t in mot_ends]
+    order = np.argsort(ends)
+    assert list(np.array(frames)[order]) == sorted(frames), \
+        "MOT must process one video's frames sequentially (state dep)"

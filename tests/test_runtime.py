@@ -1,0 +1,166 @@
+"""Discrete-event runtime: queueing, transfers, faults, stragglers, scaling."""
+import pytest
+
+from repro.core import CascadeStore
+from repro.runtime import (AZURE_NET, CLUSTER_NET, AutoScaler, Compute,
+                           FaultInjector, Get, Put, RandomScheduler, Runtime,
+                           set_straggler)
+
+
+def make_rt(n=4, regex=r"/[a-z0-9]+_", scheduler=None, **kw):
+    store = CascadeStore([f"n{i}" for i in range(n)])
+    store.create_object_pool("/x", store.nodes, n, affinity_set_regex=regex)
+    return Runtime(store, scheduler=scheduler, **kw), store
+
+
+def test_compute_queues_serialize():
+    rt, store = make_rt(1)
+    done = []
+
+    def task(ctx, key, value):
+        yield Compute("gpu", 1.0)
+        done.append(ctx.now)
+
+    rt.register("/x", task)
+    for i in range(3):
+        rt.client_put(0.0, f"/x/a_{i}", size=0)
+    rt.run()
+    # capacity 1 gpu: tasks serialize at ~1s each
+    assert [round(t, 3) for t in done] == [1.0, 2.0, 3.0]
+
+
+def test_transfer_time_charged_for_remote_get():
+    rt, store = make_rt(4)
+    times = {}
+
+    def task(ctx, key, value):
+        t0 = ctx.now
+        yield Get("/x/target_obj")          # may be remote
+        times["get"] = ctx.now - t0
+
+    store.put("/x/target_obj", b"z", size=125_000_000)  # 0.01s at 12.5GB/s
+    home = store.shard_of("/x/target_obj").nodes[0]
+    # register the task and trigger it from a key on a DIFFERENT group
+    rt.register("/x/other", task)
+    rt.client_put(0.0, "/x/other_1", size=0)
+    rt.run()
+    task_node = rt.task_log[0]["node"]
+    expect_remote = task_node != home
+    if expect_remote:
+        assert times["get"] >= 125_000_000 / CLUSTER_NET.bandwidth
+    else:
+        assert times["get"] < 1e-3
+
+
+def test_grouped_gets_are_always_local():
+    """The paper's central invariant (§4.6 Fig 5)."""
+    rt, store = make_rt(8)
+    store.cache_enabled = False
+
+    def task(ctx, key, value):
+        g = key.split("/")[-1].split("_")[0]
+        for i in range(5):
+            yield Get(f"/x/{g}_obj{i}", required=False)
+        yield Compute("gpu", 0.001)
+
+    rt.register("/x", task)
+    for g in range(8):
+        for i in range(5):
+            store.put(f"/x/g{g}_obj{i}", b"d", size=1000, fire=False)
+    for g in range(8):
+        rt.client_put(0.0, f"/x/g{g}_req", size=10)
+    rt.run()
+    assert store.stats.remote_gets == 0
+    assert store.stats.local_gets > 0
+
+
+def test_random_placement_pays_remote_gets():
+    rt, store = make_rt(8, regex=None, scheduler=RandomScheduler(1))
+
+    def task(ctx, key, value):
+        g = key.split("/")[-1].split("_")[0]
+        for i in range(5):
+            yield Get(f"/x/{g}_obj{i}", required=False)
+        yield Compute("gpu", 0.001)
+
+    rt.register("/x", task)
+    store.cache_enabled = False
+    for g in range(8):
+        for i in range(5):
+            store.put(f"/x/g{g}_obj{i}", b"d", size=1000, fire=False)
+    for g in range(8):
+        rt.client_put(0.0, f"/x/g{g}_req", size=10)
+    rt.run()
+    assert store.stats.remote_gets > 0
+
+
+def test_node_failure_with_replication_fails_over():
+    store = CascadeStore([f"n{i}" for i in range(4)])
+    store.create_object_pool("/x", store.nodes, 2, replication=2,
+                             affinity_set_regex=r"/[a-z0-9]+_")
+    rt = Runtime(store)
+    done = []
+
+    def task(ctx, key, value):
+        yield Compute("gpu", 0.5)
+        done.append((key, ctx.node, ctx.now))
+
+    rt.register("/x", task)
+    fi = FaultInjector(rt)
+    # find which node would execute group g0, then kill it just before
+    target = store.pools["/x"].home("/x/g0_1").nodes[0]
+    fi.fail_node(target, at=0.05, duration=10.0)
+    for i in range(4):
+        rt.client_put(0.1 + 0.01 * i, f"/x/g0_{i}", size=0)
+    rt.run()
+    assert len(done) == 4, "all tasks must complete despite the failure"
+    assert all(n != target or t > 10.0 for _, n, t in done)
+
+
+def test_straggler_slows_only_its_node():
+    rt, store = make_rt(2)
+    done = {}
+
+    def task(ctx, key, value):
+        yield Compute("gpu", 1.0)
+        done[key] = ctx.now
+
+    rt.register("/x", task)
+    # find two groups homed on different nodes
+    keys = {}
+    for g in range(20):
+        n = store.pools["/x"].home(f"/x/g{g}_0").nodes[0]
+        keys.setdefault(n, f"/x/g{g}_0")
+        if len(keys) == 2:
+            break
+    (fast_node, fast_key), (slow_node, slow_key) = list(keys.items())
+    set_straggler(rt, slow_node, 0.25)      # 4x slower
+    rt.client_put(0.0, fast_key, size=0)
+    rt.client_put(0.0, slow_key, size=0)
+    rt.run()
+    assert done[fast_key] == pytest.approx(1.0, abs=1e-3)
+    assert done[slow_key] == pytest.approx(4.0, abs=1e-3)
+
+
+def test_autoscaler_scales_out_and_migrates():
+    store = CascadeStore([f"n{i}" for i in range(3)] + ["spare0"])
+    store.create_object_pool("/x", [f"n{i}" for i in range(3)], 3,
+                             affinity_set_regex=r"/[a-z0-9]+_")
+    rt = Runtime(store)
+    for g in range(30):
+        store.put(f"/x/g{g}_0", b"d" * 100, fire=False)
+    sc = AutoScaler(rt, "/x", spare_nodes=["spare0"], high_watermark=1)
+    # force high queue depth
+    rt.nodes["n0"].queues["gpu"].extend([(0.0, lambda: None)] * 5)
+    dec = sc.evaluate()
+    assert dec is not None and dec.new_shards == 4
+    plan = sc.apply(dec)
+    assert len(store.pools["/x"].shards) == 4
+    # all objects still reachable at their (new) homes
+    for g in range(30):
+        rec, _ = store.get(f"/x/g{g}_0")
+        assert rec is not None
+
+
+def test_azure_profile_is_slower():
+    assert AZURE_NET.transfer_time(10 ** 6) > CLUSTER_NET.transfer_time(10 ** 6)

