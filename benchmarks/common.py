@@ -14,9 +14,11 @@ ARTIFACTS.mkdir(exist_ok=True)
 
 
 def run_rcp(grouped, layout, scenes, n_frames, caching=True, net=None,
-            scheduler=None, replication=1, seed=0):
+            scheduler=None, replication=1, seed=0, placement="hash",
+            read_replicas=1, migrate_every=None, straggler=None):
     from repro.pipelines.rcp.app import Layout, RCPApp
     from repro.pipelines.rcp.data import make_scene
+    from repro.runtime.faults import set_straggler
     from repro.runtime.scheduler import RandomScheduler
     lay = Layout(*layout, replication=replication)
     kw = {"net": net} if net is not None else {}
@@ -24,7 +26,11 @@ def run_rcp(grouped, layout, scenes, n_frames, caching=True, net=None,
                  grouped=grouped,
                  scheduler=scheduler if scheduler is not None
                  else (None if grouped else RandomScheduler(seed)),
-                 caching=caching, seed=seed, **kw)
+                 caching=caching, seed=seed, placement=placement,
+                 read_replicas=read_replicas, migrate_every=migrate_every,
+                 **kw)
+    if straggler is not None:                  # (node, speed), e.g. ("pred0", 0.3)
+        set_straggler(app.rt, *straggler)
     app.stream()
     t0 = time.perf_counter()
     app.run()

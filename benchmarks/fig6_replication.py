@@ -1,24 +1,88 @@
-"""Paper Fig. 6: replication (nodes per shard) vs affinity+many-shards."""
+"""Paper Fig. 6 regime: replication x placement policy x migration sweep.
+
+The paper's Fig. 6 shows affinity grouping keeps end-to-end latency flat as
+replication and scale-out grow.  This benchmark extends that comparison to
+the dynamic subsystem: for each replication factor it runs
+
+  * the ungrouped hash baseline ("random placement"),
+  * affinity grouping with static hash placement,
+  * affinity grouping with load-aware placement (least-loaded shard at
+    group-creation time),
+
+each with the runtime GroupMigrator off and on, and emits the paper-style
+comparison table (median / p95 / p99 latency, remote-get bytes, migration
+traffic).  The affinity-grouped load-aware row should beat the hash
+baseline on both remote bytes and tail latency.
+"""
 from .common import emit, run_rcp
 
 SCENES = ("little3", "hyang5", "gates3")
+LAYOUT = (3, 5, 5)
+
+
+def sweep(quick=True):
+    """Full replication x policy x migration grid -> list of result dicts."""
+    frames = 150 if quick else 700
+    grid = []
+    for repl in ((1, 2) if quick else (1, 2, 3)):
+        for grouped, placement in ((False, "hash"), (True, "hash"),
+                                   (True, "load_aware")):
+            for migrate in (False, True):
+                if not grouped and migrate:
+                    continue   # migration is group-granular by definition
+                grid.append((repl, grouped, placement, migrate))
+    results = []
+    for repl, grouped, placement, migrate in grid:
+        s = run_rcp(grouped, LAYOUT, SCENES, frames, placement=placement,
+                    read_replicas=repl,
+                    migrate_every=0.25 if migrate else None)
+        name = ("affinity" if grouped else "random") + f"_{placement}" \
+            + f"_r{repl}" + ("_mig" if migrate else "")
+        s["case"] = name
+        results.append(s)
+    # straggler scenario: one PRED server at 1/3 speed.  Remote-traffic
+    # heat never sees this (compute follows data, reads stay local), so it
+    # isolates the queue-pressure migration path: groups drain off the
+    # slow shard and tail latency recovers.
+    for migrate in (False, True):
+        s = run_rcp(True, LAYOUT, SCENES, frames, placement="load_aware",
+                    migrate_every=0.25 if migrate else None,
+                    straggler=("pred0", 0.33))
+        s["case"] = "affinity_load_aware_r1_straggler" + \
+            ("_mig" if migrate else "")
+        results.append(s)
+    return results
+
+
+def table(results):
+    cols = ("case", "median_ms", "p95_ms", "p99_ms", "remote_MB",
+            "sync_MB", "migrations", "mig_MB")
+    lines = ["  ".join(f"{c:>26}" if c == "case" else f"{c:>10}"
+                       for c in cols)]
+    for s in results:
+        row = (s["case"],
+               f"{s['median'] * 1e3:.2f}", f"{s['p95'] * 1e3:.2f}",
+               f"{s['p99'] * 1e3:.2f}",
+               f"{s['bytes_remote'] / 1e6:.2f}",
+               f"{s['bytes_replica_sync'] / 1e6:.2f}",
+               str(s["migrations"]),
+               f"{s['bytes_migrated'] / 1e6:.2f}")
+        lines.append("  ".join(f"{v:>26}" if i == 0 else f"{v:>10}"
+                               for i, v in enumerate(row)))
+    return "\n".join(lines)
 
 
 def run(quick=True):
-    frames = 150 if quick else 700
-    cases = [
-        ("3/5/5_r1_affinity", True, (3, 5, 5), 1),
-        ("3/5/5_r1_random", False, (3, 5, 5), 1),
-        ("1/1/1_r3", True, (1, 1, 1), 3),
-        ("1/3/3_r2_affinity", True, (1, 3, 3), 2),
-        ("1/3/3_r2_random", False, (1, 3, 3), 2),
-    ]
+    results = sweep(quick)
+    print(table(results))
     rows = []
-    for name, grouped, layout, repl in cases:
-        s = run_rcp(grouped, layout, SCENES, frames, replication=repl)
-        rows.append((f"fig6/{name}", s["median"] * 1e6,
+    for s in results:
+        rows.append((f"fig6/{s['case']}", s["median"] * 1e6,
                      {"p95_ms": round(s["p95"] * 1e3, 1),
-                      "remote_gets": s["remote_gets"]}))
+                      "p99_ms": round(s["p99"] * 1e3, 1),
+                      "remote_gets": s["remote_gets"],
+                      "bytes_remote": s["bytes_remote"],
+                      "migrations": s["migrations"]}))
     return rows
 
 

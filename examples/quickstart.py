@@ -44,3 +44,27 @@ print("PRED task for actor 7 runs on shard:", shard.name,
       "nodes:", shard.nodes)
 print("data home of actor 7:",
       store.shard_of("/positions/little3_7_0").name)
+
+# --- dynamic placement (docs/affinity_api.md) ------------------------------
+# Load-aware: whole groups bind to the least-loaded shard at creation.
+from repro.core import GroupMigrator, LoadAwarePlacement
+
+store2 = CascadeStore([f"srv{i}" for i in range(4)])
+store2.create_object_pool("/tracks", store2.nodes, 4,
+                          affinity_set_regex=r"/[a-zA-Z0-9]+_[0-9]+_",
+                          policy=LoadAwarePlacement())
+for a in range(8):
+    for f in range((a + 1) * 4):          # skewed group sizes
+        store2.put(f"/tracks/vid_{a}_{f}", b"x" * 100)
+resident = {n: sum(r.size for r in s.objects.values())
+            for n, s in store2.pools["/tracks"].shards.items()}
+print("load-aware bytes per shard:", sorted(resident.values()))
+
+# Migration: relocate a hot group — every member moves, caches invalidate,
+# and future puts/tasks follow the pin.
+home = store2.shard_of("/tracks/vid_7_0").name
+target = next(n for n in store2.pools["/tracks"].shards if n != home)
+move = GroupMigrator(store2).migrate("/tracks", "/vid_7_", to_shard=target)
+print(f"migrated group /vid_7_: {move.n_objects} objects, "
+      f"{move.bytes_moved}B  {home} -> {move.dst_shard}")
+assert store2.shard_of("/tracks/vid_7_99").name == target

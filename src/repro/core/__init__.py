@@ -2,22 +2,28 @@
 from .affinity import (AffinityFunction, AffinityKey, CallableAffinity,
                        Descriptor, InstrumentedAffinity, NoAffinity,
                        RegexAffinity, affinity_key_for)
-from .placement import (HashPlacement, PlacementEngine, PlacementPolicy,
-                        RendezvousPlacement, stable_hash)
-from .object_store import CascadeStore, ObjectPool, ObjectRecord, Shard, UDL
+from .placement import (HashPlacement, LoadAwarePlacement, PlacementEngine,
+                        PlacementPolicy, RendezvousPlacement,
+                        ReplicatedPlacement, stable_hash)
+from .object_store import (CascadeStore, GroupCounters, ObjectPool,
+                           ObjectRecord, Shard, UDL)
 from .client import ServiceClientAPI, VOLATILE, PERSISTENT
 from .prefetch import PrefetchEngine, PrefetchPlan
 from .consistency import AtomicGroupUpdate, GroupSequencer
 from .groups import GroupRegistry, MigrationPlan
+from .migration import GroupMigrator, MigrationRecord
 
 __all__ = [
     "AffinityFunction", "AffinityKey", "CallableAffinity", "Descriptor",
     "InstrumentedAffinity", "NoAffinity", "RegexAffinity", "affinity_key_for",
-    "HashPlacement", "PlacementEngine", "PlacementPolicy",
-    "RendezvousPlacement", "stable_hash",
-    "CascadeStore", "ObjectPool", "ObjectRecord", "Shard", "UDL",
+    "HashPlacement", "LoadAwarePlacement", "PlacementEngine",
+    "PlacementPolicy", "RendezvousPlacement", "ReplicatedPlacement",
+    "stable_hash",
+    "CascadeStore", "GroupCounters", "ObjectPool", "ObjectRecord", "Shard",
+    "UDL",
     "ServiceClientAPI", "VOLATILE", "PERSISTENT",
     "PrefetchEngine", "PrefetchPlan",
     "AtomicGroupUpdate", "GroupSequencer",
     "GroupRegistry", "MigrationPlan",
+    "GroupMigrator", "MigrationRecord",
 ]

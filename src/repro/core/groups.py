@@ -38,8 +38,12 @@ class GroupRegistry:
     def snapshot(self, pool_prefix: str) -> Dict[str, GroupInfo]:
         pool = self.store.pools[pool_prefix]
         groups: Dict[str, GroupInfo] = {}
+        seen = set()
         for shard in pool.shards.values():
-            for rec in shard.objects.values():
+            for key, rec in shard.objects.items():
+                if key in seen:          # replicas count once
+                    continue
+                seen.add(key)
                 g = groups.setdefault(
                     rec.affinity,
                     GroupInfo(label=rec.affinity, pool=pool_prefix))

@@ -1,0 +1,248 @@
+"""Hot-group detection and group-granularity migration.
+
+Static hash placement (the paper's §4.5 default) balances *groups* across
+shards, but real workloads skew: a few affinity groups (one viral video,
+one busy actor, one chatty session) can dominate a shard.  The paper's
+collocation invariant makes the fix cheap — the affinity group is already
+the unit of residency, so it is also the natural unit of *migration*: move
+every member of the group to a new home shard, pin the label there, and
+all future placements (data AND tasks, §3.3 unified placement) follow.
+
+``GroupMigrator`` consumes the store's per-group ``GroupCounters`` (updated
+on every put/get), ranks groups by a bytes-weighted heat score, and
+relocates the hottest group off the hottest shard when the shard-level
+imbalance exceeds a threshold.  A migration:
+
+  1. collects every member object of the group (all replicas);
+  2. re-homes the label via ``PlacementEngine.pin`` (works for any policy);
+  3. reinstalls the members at the new replica homes under bumped
+     versions, removing the old copies;
+  4. drops stale node-cache entries for the moved keys;
+  5. charges ``StoreStats.migrations`` / ``bytes_migrated`` so the
+     discrete-event runtime can bill transfer time for the move.
+
+The runtime driver (``repro.runtime.executor.Runtime.enable_migration``)
+calls ``rebalance`` on a virtual-time interval and charges the returned
+byte volume as NIC transfers on the destination shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .object_store import CascadeStore, GroupCounters, ObjectPool
+
+
+@dataclasses.dataclass
+class MigrationRecord:
+    pool: str
+    label: str
+    src_shards: List[str]
+    dst_shard: str
+    n_objects: int
+    bytes_moved: int
+    cache_invalidations: int
+
+
+class GroupMigrator:
+    """Detects hot affinity groups and relocates them atomically."""
+
+    def __init__(self, store: CascadeStore,
+                 imbalance_ratio: float = 2.0,
+                 min_heat: float = 1.0,
+                 min_depth: float = 8.0):
+        self.store = store
+        self.imbalance_ratio = imbalance_ratio
+        self.min_heat = min_heat
+        self.min_depth = min_depth   # queue-pressure floor (shard_load mode)
+        self.log: List[MigrationRecord] = []
+
+    # -- detection ----------------------------------------------------------
+
+    def resident_bytes(self, pool_prefix: str) -> Dict[str, int]:
+        pool = self.store.pools[pool_prefix]
+        out = {name: 0 for name in pool.shards}
+        for name, shard in pool.shards.items():
+            out[name] = sum(r.size for r in shard.objects.values())
+        return out
+
+    def shard_heat(self, pool_prefix: str) -> Dict[str, float]:
+        """Access heat per shard = sum of its resident groups' heat."""
+        pool = self.store.pools[pool_prefix]
+        heat = {name: 0.0 for name in pool.shards}
+        for (pfx, label), g in self.store.group_counters.items():
+            if pfx != pool_prefix:
+                continue
+            home = pool.engine.home_of(label)
+            if home in heat:
+                heat[home] += g.heat
+        return heat
+
+    def hot_groups(self, pool_prefix: str, shard: Optional[str] = None,
+                   top_k: int = 5) -> List[GroupCounters]:
+        """Hottest groups in the pool (optionally restricted to a shard)."""
+        pool = self.store.pools[pool_prefix]
+        out = []
+        for (pfx, label), g in self.store.group_counters.items():
+            if pfx != pool_prefix or g.heat < self.min_heat:
+                continue
+            if shard is not None and pool.engine.home_of(label) != shard:
+                continue
+            out.append(g)
+        out.sort(key=lambda g: g.heat, reverse=True)
+        return out[:top_k]
+
+    # -- relocation ---------------------------------------------------------
+
+    def migrate(self, pool_prefix: str, label: str,
+                to_shard: Optional[str] = None) -> Optional[MigrationRecord]:
+        """Atomically move every member of `label` to `to_shard`.
+
+        Returns None when there is nothing to move or the group already
+        lives on the target.  All members move together — the collocation
+        invariant holds before and after.
+        """
+        pool = self.store.pools[pool_prefix]
+        keys = self.store.group_members(pool_prefix, label)
+        if not keys:
+            return None
+        if to_shard is None:
+            to_shard = self._coldest(pool, exclude=pool.engine.home_of(label))
+        if to_shard is None or pool.engine.home_of(label) == to_shard:
+            return None
+        assert to_shard in pool.shards, (to_shard, list(pool.shards))
+
+        # 1. collect members (dedupe across replicas) and drop old copies
+        recs = {}
+        src = set()
+        for name, shard in pool.shards.items():
+            for k in keys:
+                r = shard.objects.pop(k, None)
+                if r is not None:
+                    recs.setdefault(k, r)
+                    src.add(name)
+        total = sum(r.size for r in recs.values())
+
+        # 2. re-home the label; every later put/get/trigger follows
+        pool.engine.pin(label, to_shard, nbytes=total)
+
+        # 3. reinstall under bumped versions at the new replica homes
+        for k, r in recs.items():
+            self.store._version += 1
+            moved = dataclasses.replace(r, version=self.store._version)
+            for home in pool.replica_homes(k):
+                home.objects[k] = moved
+
+        # 4. stale node caches must not serve the old versions
+        invalidated = self.store.invalidate_cached(list(recs))
+
+        # 5. charge the move
+        self.store.stats.migrations += 1
+        self.store.stats.bytes_migrated += total
+
+        rec = MigrationRecord(pool=pool_prefix, label=label,
+                              src_shards=sorted(src), dst_shard=to_shard,
+                              n_objects=len(recs), bytes_moved=total,
+                              cache_invalidations=invalidated)
+        self.log.append(rec)
+        return rec
+
+    def rebalance(self, pool_prefix: str, max_moves: int = 1,
+                  shard_load: Optional[Dict[str, float]] = None
+                  ) -> List[MigrationRecord]:
+        """Move hottest groups off the hottest shard while imbalanced.
+
+        Two load signals, depending on the deployment:
+
+        * default (``shard_load=None``): counter-based remote-traffic heat
+          — only fires where placement causes real network cost, so a
+          perfectly collocated pool is never touched;
+        * ``shard_load`` given (e.g. queue depths from the runtime):
+          compute pressure — catches stragglers/overload that never show
+          up as remote bytes because compute follows data.  The busiest
+          resident group is moved off the most-loaded shard.
+        """
+        if shard_load is not None:
+            return self._rebalance_by_load(pool_prefix, shard_load,
+                                           max_moves)
+        moves: List[MigrationRecord] = []
+        for _ in range(max_moves):
+            heat = self.shard_heat(pool_prefix)
+            if len(heat) < 2:
+                break
+            hottest = max(heat, key=heat.get)
+            coldest = min(heat, key=heat.get)
+            if heat[hottest] < self.min_heat or \
+                    heat[hottest] < self.imbalance_ratio * \
+                    max(heat[coldest], self.min_heat):
+                break
+            cands = self.hot_groups(pool_prefix, shard=hottest, top_k=5)
+            moved = None
+            for g in cands:
+                # don't move a group so hot it would just flip the imbalance
+                if g.heat > (heat[hottest] - heat[coldest]):
+                    continue
+                moved = self.migrate(pool_prefix, g.label, to_shard=coldest)
+                if moved is not None:
+                    break
+            if moved is None:
+                break
+            moves.append(moved)
+        return moves
+
+    def _rebalance_by_load(self, pool_prefix: str,
+                           shard_load: Dict[str, float],
+                           max_moves: int) -> List[MigrationRecord]:
+        pool = self.store.pools[pool_prefix]
+        load = {name: shard_load.get(name, 0.0) for name in pool.shards}
+        moves: List[MigrationRecord] = []
+        if len(load) < 2:
+            return moves
+        hottest = max(load, key=load.get)
+        coldest = min(load, key=load.get)
+        # the absolute floor keeps transient 1-2 deep queue blips from
+        # triggering moves on a healthy cluster
+        if load[hottest] < self.min_depth or \
+                load[hottest] < self.imbalance_ratio * \
+                max(load[coldest], 1.0):
+            return moves
+        # rank resident groups by recent activity (local ops included —
+        # activity is what queues the shard, not remoteness)
+        cands = []
+        for (pfx, label), g in self.store.group_counters.items():
+            if pfx == pool_prefix and pool.engine.home_of(label) == hottest:
+                cands.append((g.gets + g.puts, label))
+        cands.sort(reverse=True)
+        for _, label in cands[:max_moves]:
+            moved = self.migrate(pool_prefix, label, to_shard=coldest)
+            if moved is not None:
+                moves.append(moved)
+        return moves
+
+    def decay(self, alpha: float = 0.5,
+              pool_prefix: Optional[str] = None) -> None:
+        """Age the heat counters so old traffic stops driving decisions.
+
+        Pass ``pool_prefix`` to age only that pool's counters — a driver
+        ticking several pools must not compound-decay the whole store.
+        """
+        for (pfx, _), g in self.store.group_counters.items():
+            if pool_prefix is not None and pfx != pool_prefix:
+                continue
+            g.puts = int(g.puts * alpha)
+            g.gets = int(g.gets * alpha)
+            g.remote_gets = int(g.remote_gets * alpha)
+            g.bytes_put = int(g.bytes_put * alpha)
+            g.bytes_remote = int(g.bytes_remote * alpha)
+
+    # -- internals ----------------------------------------------------------
+
+    @staticmethod
+    def _coldest(pool: ObjectPool, exclude: str) -> Optional[str]:
+        cands = [name for name in pool.shards if name != exclude]
+        if not cands:
+            return None
+        resident = {name: sum(r.size for r in pool.shards[name]
+                              .objects.values()) for name in cands}
+        return min(cands, key=lambda n: resident[n])

@@ -45,9 +45,37 @@ class StoreStats:
     bytes_put: int = 0
     bytes_remote: int = 0
     triggers: int = 0
+    replica_syncs: int = 0        # extra-replica write fan-outs
+    bytes_replica_sync: int = 0
+    migrations: int = 0           # group relocations (GroupMigrator)
+    bytes_migrated: int = 0
 
     def as_dict(self):
         return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class GroupCounters:
+    """Per-affinity-group load counters (hot-group detection input)."""
+    pool: str
+    label: str
+    puts: int = 0
+    gets: int = 0
+    remote_gets: int = 0
+    bytes_put: int = 0
+    bytes_remote: int = 0
+
+    @property
+    def heat(self) -> float:
+        """Remote access pressure used to rank groups.
+
+        Local gets/puts are zero-copy and free — only remote traffic
+        counts, so a perfectly collocated group has exactly 0 heat and
+        the migrator provably leaves already-ideal placements alone
+        (migration can then only fire where placement is causing real
+        network cost).
+        """
+        return self.bytes_remote + 64.0 * self.remote_gets
 
 
 class Shard:
@@ -84,6 +112,12 @@ class ObjectPool:
         d = self.descriptor(key, size, **meta)
         return self.shards[self.engine.place(d).shard]
 
+    def replica_homes(self, key: str, size: int = 0, **meta) -> List[Shard]:
+        """All shards holding the key's group, primary first."""
+        d = self.descriptor(key, size, **meta)
+        label = affinity_key_for(self.affinity_fn, d)
+        return [self.shards[s] for s in self.engine.replica_homes(label)]
+
     def affinity_of(self, key: str) -> str:
         d = self.descriptor(key)
         return affinity_key_for(self.affinity_fn, d)
@@ -108,6 +142,7 @@ class CascadeStore:
             n: {} for n in self.nodes}
         self.cache_enabled = True
         self.stats = StoreStats()
+        self.group_counters: Dict[Tuple[str, str], GroupCounters] = {}
         self._version = 0
 
     # -- pool management (paper Listing 1) -----------------------------------
@@ -159,7 +194,8 @@ class CascadeStore:
         """
         pool = self.pool_for(key)
         sz = size if size is not None else _sizeof(value)
-        shard = pool.home(key, sz, **meta)
+        homes = pool.replica_homes(key, sz, **meta)
+        shard = homes[0]
         self._version += 1
         rec = ObjectRecord(key=key, value=value, size=sz,
                            version=self._version,
@@ -167,6 +203,18 @@ class CascadeStore:
         shard.objects[key] = rec
         self.stats.puts += 1
         self.stats.bytes_put += sz * max(len(shard.nodes), 1)
+        pool.engine.record_load(shard.name, sz)
+        # replica fan-out: ship the object to every extra replica shard
+        for extra in homes[1:]:
+            extra.objects[key] = rec
+            self.stats.replica_syncs += 1
+            self.stats.bytes_replica_sync += sz * max(len(extra.nodes), 1)
+        if pool.affinity_fn is not None:
+            # ungrouped pools can never be migrated — tracking a counter
+            # per raw key would only grow detection/decay scans unboundedly
+            g = self._counters(pool.prefix, rec.affinity)
+            g.puts += 1
+            g.bytes_put += sz
         fired = self._matching_udls(key) if fire else []
         return shard, fired
 
@@ -183,15 +231,29 @@ class CascadeStore:
         """Fetch by key from `node`. Returns (record, was_local).
 
         was_local is True when the record lives in the node's shard or its
-        cache (Cascade zero-copy local get).  The runtime charges network
-        time for remote gets.
+        cache (Cascade zero-copy local get).  Under ``ReplicatedPlacement``
+        the read is served by the *nearest* replica: a replica shard the
+        node belongs to wins; otherwise any replica serves it remotely.
+        The runtime charges network time for remote gets.
         """
         pool = self.pool_for(key)
-        shard = pool.home(key)
-        rec = shard.objects.get(key)
+        homes = pool.replica_homes(key)
+        shard, rec = homes[0], None
+        for h in homes:
+            r = h.objects.get(key)
+            if r is None:
+                continue
+            if rec is None or (node is not None and node in h.nodes):
+                shard, rec = h, r
+            if node is not None and node in h.nodes:
+                break
         self.stats.gets += 1
         if rec is None:
             return None, False
+        g = (self._counters(pool.prefix, rec.affinity)
+             if pool.affinity_fn is not None else None)
+        if g is not None:
+            g.gets += 1
         local = node is not None and node in shard.nodes
         if not local and node is not None and self.cache_enabled:
             cached = self.caches[node].get(key)
@@ -203,6 +265,10 @@ class CascadeStore:
         else:
             self.stats.remote_gets += 1
             self.stats.bytes_remote += rec.size
+            if g is not None:
+                g.remote_gets += 1
+                g.bytes_remote += rec.size
+            pool.engine.record_load(shard.name, rec.size)
             if node is not None and self.cache_enabled:
                 self.caches[node][key] = rec
         return rec, local
@@ -210,10 +276,22 @@ class CascadeStore:
     def delete_prefix(self, prefix: str) -> int:
         n = 0
         for pool in self.pools.values():
+            seen = set()
             for shard in pool.shards.values():
                 doomed = [k for k in shard.objects if k.startswith(prefix)]
                 for k in doomed:
                     del shard.objects[k]
+                    if k not in seen:      # replicas count once
+                        seen.add(k)
+                        n += 1
+        return n
+
+    def invalidate_cached(self, keys: Sequence[str]) -> int:
+        """Drop node-cache entries for `keys` (migration barrier)."""
+        n = 0
+        for cache in self.caches.values():
+            for k in keys:
+                if cache.pop(k, None) is not None:
                     n += 1
         return n
 
@@ -227,11 +305,22 @@ class CascadeStore:
 
     def group_members(self, prefix: str, label: str) -> List[str]:
         pool = self.pools[prefix]
-        out = []
+        out: List[str] = []
+        seen = set()
         for shard in pool.shards.values():
-            out.extend(k for k, r in shard.objects.items()
-                       if r.affinity == label)
+            for k, r in shard.objects.items():
+                if r.affinity == label and k not in seen:
+                    seen.add(k)
+                    out.append(k)
         return out
+
+    def _counters(self, pool_prefix: str, label: str) -> GroupCounters:
+        gid = (pool_prefix, label)
+        g = self.group_counters.get(gid)
+        if g is None:
+            g = self.group_counters[gid] = GroupCounters(pool=pool_prefix,
+                                                         label=label)
+        return g
 
 
 def _sizeof(value: Any) -> int:

@@ -9,11 +9,26 @@ For elastic scaling we also provide rendezvous (HRW) hashing: when a shard
 is added/removed only ~1/n of affinity groups move, and the mapping needs no
 synchronized state — any node computes it locally (the paper's 'lightweight'
 requirement under autoscaling).
+
+Beyond the paper's static policies, two dynamic ones (Fig. 6 regime):
+
+  * ``LoadAwarePlacement`` — a whole affinity group is bound to the
+    least-loaded shard at group-creation time (first put of the group);
+    later members follow the binding, so collocation is preserved while
+    shards fill evenly by *bytes*, not by group count;
+  * ``ReplicatedPlacement`` — each group lives on ``n_replicas`` shards
+    (primary by the inner policy, extras by rendezvous rank); writes
+    fan out, reads pick the nearest replica.
+
+The engine additionally supports per-label *pins* — explicit
+label -> shard overrides that ``GroupMigrator`` installs when it relocates
+a hot group, so any policy (including plain hash) becomes migratable.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+from collections import defaultdict
 from typing import Callable, Dict, List, Optional, Sequence
 
 from .affinity import AffinityFunction, AffinityKey, Descriptor, affinity_key_for
@@ -53,6 +68,93 @@ class RendezvousPlacement(PlacementPolicy):
         return "rendezvous"
 
 
+class LoadAwarePlacement(PlacementPolicy):
+    """Bind each affinity group to the least-loaded shard at creation time.
+
+    Load is tracked in bytes written (plus a small per-request charge so
+    empty groups still spread).  The binding is sticky: every later member
+    of the group lands on the same shard, so the collocation invariant
+    holds while the *assignment* of groups to shards tracks actual load
+    rather than hash luck.  ``record_load`` is fed by the store on puts and
+    remote gets; ``rebind`` is used by the migrator.
+    """
+
+    REQUEST_COST = 64   # bytes-equivalent charge per placement request
+
+    def __init__(self):
+        self.assignments: Dict[str, str] = {}
+        self.load: Dict[str, float] = defaultdict(float)
+
+    def place(self, label: str, shards: Sequence[str]) -> str:
+        shard = self.assignments.get(label)
+        if shard is None or shard not in shards:
+            # tie-break by shard *position*, not name: pools that list their
+            # shards in the same order (e.g. /frames and /states over the
+            # same nodes) then bind identical labels to identical slots, so
+            # cross-pool collocation survives the switch away from hashing
+            i = min(range(len(shards)),
+                    key=lambda j: (self.load[shards[j]], j))
+            shard = shards[i]
+            self.assignments[label] = shard
+            self.load[shard] += self.REQUEST_COST
+        return shard
+
+    def record_load(self, shard: str, nbytes: int) -> None:
+        self.load[shard] += nbytes
+
+    def rebind(self, label: str, shard: str, nbytes: int = 0) -> None:
+        """Move a group's binding (migration): transfer its load charge."""
+        old = self.assignments.get(label)
+        if old is not None and nbytes:
+            self.load[old] = max(self.load[old] - nbytes, 0.0)
+        self.assignments[label] = shard
+        if nbytes:
+            self.load[shard] += nbytes
+
+    def name(self) -> str:
+        return "load_aware"
+
+
+class ReplicatedPlacement(PlacementPolicy):
+    """Group-granular replication over shards (paper §4.6 / Fig. 6).
+
+    The *primary* home is the inner policy's choice; the remaining
+    ``n_replicas - 1`` homes are the top shards by rendezvous rank,
+    skipping the primary.  ``place`` returns the primary (writes are
+    applied there first); ``replica_shards`` is the full ordered set the
+    store fans writes out to and serves reads from.
+    """
+
+    def __init__(self, inner: Optional[PlacementPolicy] = None,
+                 n_replicas: int = 2):
+        assert n_replicas >= 1, n_replicas
+        self.inner = inner or HashPlacement()
+        self.n_replicas = n_replicas
+
+    def place(self, label: str, shards: Sequence[str]) -> str:
+        return self.inner.place(label, shards)
+
+    def replica_shards(self, label: str, shards: Sequence[str]) -> List[str]:
+        primary = self.place(label, shards)
+        ranked = sorted((s for s in shards if s != primary),
+                        key=lambda s: stable_hash(f"{label}::{s}"),
+                        reverse=True)
+        return [primary] + ranked[:self.n_replicas - 1]
+
+    def record_load(self, shard: str, nbytes: int) -> None:
+        rec = getattr(self.inner, "record_load", None)
+        if rec is not None:
+            rec(shard, nbytes)
+
+    def rebind(self, label: str, shard: str, nbytes: int = 0) -> None:
+        rb = getattr(self.inner, "rebind", None)
+        if rb is not None:
+            rb(label, shard, nbytes)
+
+    def name(self) -> str:
+        return f"replicated({self.inner.name()},r={self.n_replicas})"
+
+
 @dataclasses.dataclass
 class PlacementDecision:
     shard: str
@@ -73,12 +175,50 @@ class PlacementEngine:
         self.shards: List[str] = list(shards)
         self.affinity_fn = affinity_fn
         self.policy = policy or HashPlacement()
+        self.pins: Dict[str, str] = {}    # label -> shard (migration)
 
     def place(self, desc: Descriptor) -> PlacementDecision:
         label = affinity_key_for(self.affinity_fn, desc)
-        shard = self.policy.place(label, self.shards)
+        shard = self.home_of(label)
         return PlacementDecision(shard=shard, label=label,
                                  grouped=(label != desc.key))
+
+    def home_of(self, label: str) -> str:
+        pinned = self.pins.get(label)
+        if pinned is not None and pinned in self.shards:
+            return pinned
+        return self.policy.place(label, self.shards)
+
+    def replica_homes(self, label: str) -> List[str]:
+        """All shards holding the group (primary first). Length 1 unless
+        the policy is replicated."""
+        rep = getattr(self.policy, "replica_shards", None)
+        if rep is None:
+            return [self.home_of(label)]
+        homes = rep(label, self.shards)
+        pinned = self.pins.get(label)
+        if pinned is not None and pinned in self.shards:
+            k = max(len(homes), 1)
+            homes = ([pinned] + [s for s in homes if s != pinned])[:k]
+        return homes
+
+    # -- load + migration hooks --------------------------------------------
+
+    def record_load(self, shard: str, nbytes: int) -> None:
+        rec = getattr(self.policy, "record_load", None)
+        if rec is not None:
+            rec(shard, nbytes)
+
+    def pin(self, label: str, shard: str, nbytes: int = 0) -> None:
+        """Override a group's home (installed by GroupMigrator)."""
+        assert shard in self.shards, (shard, self.shards)
+        self.pins[label] = shard
+        rb = getattr(self.policy, "rebind", None)
+        if rb is not None:
+            rb(label, shard, nbytes)
+
+    def unpin(self, label: str) -> None:
+        self.pins.pop(label, None)
 
     # -- elasticity ---------------------------------------------------------
 

@@ -19,9 +19,11 @@ import dataclasses
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
-from repro.core import CascadeStore
+from repro.core import (CascadeStore, HashPlacement, LoadAwarePlacement,
+                        RendezvousPlacement, ReplicatedPlacement)
+from repro.core.placement import PlacementPolicy
 from repro.runtime import (CLUSTER_NET, Compute, Get, NetProfile, Put,
-                           Runtime, ShardLocalScheduler)
+                           ReplicaScheduler, Runtime, ShardLocalScheduler)
 from repro.runtime.scheduler import Scheduler
 from .data import (FRAME_BYTES, P_HIST, POSITION_BYTES, PREDICTION_BYTES,
                    Scene, make_scene)
@@ -79,10 +81,20 @@ class RCPApp:
                  net: NetProfile = CLUSTER_NET,
                  profile: Optional[StageProfile] = None,
                  caching: bool = True,
+                 placement: str = "hash",
+                 read_replicas: int = 1,
+                 migrate_every: Optional[float] = None,
                  seed: int = 0):
+        """placement: 'hash' | 'load_aware' | 'rendezvous' — policy binding
+        affinity groups to shards.  read_replicas > 1 wraps the policy in
+        ``ReplicatedPlacement`` (writes fan out, reads hit the nearest
+        replica).  migrate_every enables the runtime's GroupMigrator on the
+        PRED/CD pools at that virtual-time interval."""
         self.scenes = {s.name: s for s in scenes}
         self.layout = layout
         self.grouped = grouped
+        self.placement = placement
+        self.read_replicas = read_replicas
         self.profile = profile or StageProfile()
         self.tracker = FrameTracker()
 
@@ -98,20 +110,35 @@ class RCPApp:
         store.cache_enabled = caching
 
         regex = (lambda p: p) if grouped else (lambda p: None)
+
+        def make_policy(n_shards: int) -> PlacementPolicy:
+            base = {"hash": HashPlacement,
+                    "load_aware": LoadAwarePlacement,
+                    "rendezvous": RendezvousPlacement}[placement]()
+            if read_replicas > 1:
+                return ReplicatedPlacement(
+                    base, n_replicas=min(read_replicas, n_shards))
+            return base
+
         store.create_object_pool("/frames", self.mot_nodes, layout.mot,
                                  replication=r,
-                                 affinity_set_regex=regex(FRAME_RE))
+                                 affinity_set_regex=regex(FRAME_RE),
+                                 policy=make_policy(layout.mot))
         store.create_object_pool("/states", self.mot_nodes, layout.mot,
                                  replication=r,
-                                 affinity_set_regex=regex(FRAME_RE))
+                                 affinity_set_regex=regex(FRAME_RE),
+                                 policy=make_policy(layout.mot))
         store.create_object_pool("/positions", self.pred_nodes, layout.pred,
                                  replication=r,
-                                 affinity_set_regex=regex(ACTOR_RE))
+                                 affinity_set_regex=regex(ACTOR_RE),
+                                 policy=make_policy(layout.pred))
         store.create_object_pool("/predictions", self.cd_nodes, layout.cd,
                                  replication=r,
-                                 affinity_set_regex=regex(ACTOR_RE))
+                                 affinity_set_regex=regex(ACTOR_RE),
+                                 policy=make_policy(layout.cd))
         store.create_object_pool("/cd", self.cd_nodes, layout.cd,
-                                 replication=r)
+                                 replication=r,
+                                 policy=make_policy(layout.cd))
 
         resources = {}
         for n in self.mot_nodes + self.pred_nodes:
@@ -119,10 +146,15 @@ class RCPApp:
         for n in self.cd_nodes:
             resources[n] = {"gpu": 0, "cpu": 2, "nic": 2}
 
-        self.rt = Runtime(store, resources, net=net,
-                          scheduler=scheduler or ShardLocalScheduler(),
+        if scheduler is None:
+            scheduler = (ReplicaScheduler(store) if read_replicas > 1
+                         else ShardLocalScheduler())
+        self.rt = Runtime(store, resources, net=net, scheduler=scheduler,
                           seed=seed)
         self.store = store
+        if migrate_every is not None:
+            self.rt.enable_migration("/positions", interval=migrate_every)
+            self.rt.enable_migration("/predictions", interval=migrate_every)
 
         self.rt.register("/frames", self._mot_task,
                          order_of=lambda k: k.split("/")[-1].rsplit("_", 1)[0],
@@ -216,8 +248,12 @@ class RCPApp:
             "median": float(np.median(arr)),
             "p75": float(np.percentile(arr, 75)),
             "p95": float(np.percentile(arr, 95)),
+            "p99": float(np.percentile(arr, 99)),
             "mean": float(arr.mean()),
             "remote_gets": self.store.stats.remote_gets,
             "local_gets": self.store.stats.local_gets,
             "bytes_remote": self.store.stats.bytes_remote,
+            "bytes_replica_sync": self.store.stats.bytes_replica_sync,
+            "migrations": self.store.stats.migrations,
+            "bytes_migrated": self.store.stats.bytes_migrated,
         }

@@ -1,7 +1,7 @@
 from .simulation import (AZURE_NET, CLUSTER_NET, Compute, Get, NetProfile,
                          Node, Put, Simulator, Sleep, Trigger)
-from .scheduler import (LeastLoadedScheduler, RandomScheduler, Scheduler,
-                        ShardLocalScheduler)
+from .scheduler import (LeastLoadedScheduler, RandomScheduler,
+                        ReplicaScheduler, Scheduler, ShardLocalScheduler)
 from .executor import Runtime, TaskContext
 from .faults import FaultInjector, set_straggler
 from .autoscale import AutoScaler, ScaleDecision
@@ -9,8 +9,8 @@ from .autoscale import AutoScaler, ScaleDecision
 __all__ = [
     "AZURE_NET", "CLUSTER_NET", "Compute", "Get", "NetProfile", "Node",
     "Put", "Simulator", "Sleep", "Trigger",
-    "LeastLoadedScheduler", "RandomScheduler", "Scheduler",
-    "ShardLocalScheduler",
+    "LeastLoadedScheduler", "RandomScheduler", "ReplicaScheduler",
+    "Scheduler", "ShardLocalScheduler",
     "Runtime", "TaskContext",
     "FaultInjector", "set_straggler",
     "AutoScaler", "ScaleDecision",

@@ -13,7 +13,7 @@ import dataclasses
 from collections import defaultdict
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from repro.core import CascadeStore, GroupSequencer
+from repro.core import CascadeStore, GroupMigrator, GroupSequencer
 from repro.core.object_store import Shard, UDL
 from .simulation import (AZURE_NET, CLUSTER_NET, Compute, Get, NetProfile,
                          Node, Put, Simulator, Sleep, Trigger)
@@ -59,6 +59,12 @@ class Runtime:
         self.hedge_after = hedge_after
         self.hedges = 0
         self.task_log: List[Dict[str, Any]] = []
+        self.migrators: Dict[str, GroupMigrator] = {}   # pool -> migrator
+        self.migration_log: List[Dict[str, Any]] = []
+        self._pending_ticks = 0
+        # tasks dispatched to a shard and not yet completed — includes work
+        # parked in the per-group sequencer, which node queues never see
+        self.shard_outstanding: Dict[str, int] = defaultdict(int)
 
     # -- registration ----------------------------------------------------------
 
@@ -79,6 +85,7 @@ class Runtime:
 
     def _dispatch(self, udl: UDL, shard: Shard, key: str, value: Any) -> None:
         binding = self.bindings[udl.name]
+        self.shard_outstanding[shard.name] += 1
         if binding.order_of is not None:
             label = f"{udl.name}::{binding.order_of(key)}"
             self.sequencer.admit(label, (binding, shard, key, value))
@@ -97,6 +104,7 @@ class Runtime:
         t0 = self.sim.now
 
         def done():
+            self.shard_outstanding[shard.name] -= 1
             self.task_log.append({
                 "udl": binding.udl.name, "key": key, "node": node,
                 "t_start": t0, "t_end": self.sim.now,
@@ -108,6 +116,72 @@ class Runtime:
                     self._launch(label, *nxt)
 
         self.sim.spawn(node, gen, done=done)
+
+    # -- load-aware group migration ----------------------------------------------
+
+    def enable_migration(self, pool_prefix: str, interval: float = 0.5,
+                         imbalance_ratio: float = 2.0, min_heat: float = 1.0,
+                         max_moves: int = 1, decay: float = 0.5) -> GroupMigrator:
+        """Run the GroupMigrator on a virtual-time interval.
+
+        Every `interval` sim-seconds the migrator rebalances `pool_prefix`:
+        hot affinity groups move (whole-group, cache-invalidating) to the
+        coldest shard, and the move's bytes are charged as a background NIC
+        transfer on a destination-shard node.  The tick stops rescheduling
+        once the event heap drains so bounded workloads still terminate.
+        """
+        assert pool_prefix not in self.migrators, \
+            f"migration already enabled for {pool_prefix}"
+        migrator = GroupMigrator(self.store,
+                                 imbalance_ratio=imbalance_ratio,
+                                 min_heat=min_heat)
+        self.migrators[pool_prefix] = migrator
+
+        def shard_load():
+            # pressure per shard: dispatched-but-incomplete tasks (counts
+            # sequencer-parked work a node-queue sample would miss), plus
+            # the worst member node's live queue
+            out = {}
+            for name, shard in self.store.pools[pool_prefix].shards.items():
+                depth = float(self.shard_outstanding[name])
+                for n in shard.nodes:
+                    node = self.nodes[n]
+                    q = (sum(len(qq) for qq in node.queues.values())
+                         + sum(node.in_use.values()))
+                    depth = max(depth, float(q))
+                out[name] = depth
+            return out
+
+        def tick():
+            self._pending_ticks -= 1
+            # remote-traffic pass first (fixes placement-caused network
+            # cost), then a queue-pressure pass (fixes compute hotspots
+            # like stragglers that never show up as remote bytes)
+            moves = migrator.rebalance(pool_prefix, max_moves=max_moves)
+            moves += migrator.rebalance(pool_prefix, max_moves=max_moves,
+                                        shard_load=shard_load())
+            pool = self.store.pools[pool_prefix]
+            for mv in moves:
+                dst_nodes = pool.shards[mv.dst_shard].nodes
+                if dst_nodes:
+                    self.sim._charge_transfer(self.nodes[dst_nodes[0]],
+                                              mv.bytes_moved)
+                self.migration_log.append({
+                    "t": self.sim.now, "pool": mv.pool, "label": mv.label,
+                    "to": mv.dst_shard, "bytes": mv.bytes_moved,
+                    "objects": mv.n_objects,
+                })
+            migrator.decay(decay, pool_prefix=pool_prefix)
+            # reschedule only while the heap holds REAL work — other pools'
+            # migration ticks don't count, else ticks keep each other alive
+            # and a bounded workload never terminates
+            if len(self.sim._heap) > self._pending_ticks:
+                self._pending_ticks += 1
+                self.sim.after(interval, tick)
+
+        self._pending_ticks += 1
+        self.sim.after(interval, tick)
+        return migrator
 
     # -- client ingress --------------------------------------------------------------
 

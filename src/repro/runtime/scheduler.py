@@ -11,7 +11,7 @@ from __future__ import annotations
 import random
 from typing import Dict, List, Optional, Sequence
 
-from repro.core.object_store import Shard
+from repro.core.object_store import CascadeStore, Shard
 from .simulation import Node
 
 
@@ -42,6 +42,40 @@ class ShardLocalScheduler(Scheduler):
 
     def name(self):
         return "affinity"
+
+
+class ReplicaScheduler(Scheduler):
+    """Affinity mode over replicated groups (read fan-out for compute).
+
+    With ``ReplicatedPlacement`` a group lives on several shards; any
+    replica member can serve a task locally, so we pick the least-loaded
+    up node across ALL replica shards — the collocation benefit of
+    ``ShardLocalScheduler`` plus the load-spreading of replication.
+    """
+
+    def __init__(self, store: CascadeStore):
+        self.store = store
+
+    def pick(self, shard, key, nodes, pool_nodes):
+        try:
+            homes = self.store.pool_for(key).replica_homes(key)
+        except KeyError:
+            homes = [shard]
+        cand = [n for h in homes for n in h.nodes if nodes[n].up]
+        if not cand:
+            cand = list(shard.nodes)
+
+        def load(n):
+            # total outstanding work over every resource: stages differ in
+            # what they consume (MOT/PRED: gpu, CD: cpu), and a scheduler
+            # that only counted gpu would see cpu-only nodes as idle
+            node = nodes[n]
+            return (sum(len(q) for q in node.queues.values())
+                    + sum(node.in_use.values()))
+        return min(cand, key=load)
+
+    def name(self):
+        return "replica_affinity"
 
 
 class RandomScheduler(Scheduler):

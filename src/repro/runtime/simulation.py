@@ -236,12 +236,18 @@ class Simulator:
         elif isinstance(op, (Put, Trigger)):
             fire = isinstance(op, Trigger) or op.fire
             if isinstance(op, Put):
+                sync0 = self.store.stats.bytes_replica_sync
                 shard, udls = self.store.put(op.key, op.value, size=op.size,
                                              fire=fire)
                 # replication cost: object ships to every member not local
                 remote = [n for n in shard.nodes if n != node.name]
                 dt = self.net.transfer_time(op.size) if remote else \
                     self.local_get_cost
+                # cross-shard replica fan-out (ReplicatedPlacement): async
+                # sync that still occupies the writer's NIC
+                sync_bytes = self.store.stats.bytes_replica_sync - sync0
+                if sync_bytes:
+                    self._charge_transfer(node, sync_bytes)
             else:
                 shard, udls = self.store.trigger(op.key, op.value,
                                                  size=op.size)
@@ -261,3 +267,20 @@ class Simulator:
 
         else:
             raise TypeError(f"unknown op {op!r}")
+
+    # -- background transfers ------------------------------------------------
+
+    def _charge_transfer(self, node: Node, nbytes: int,
+                         done: Optional[Callable[[], None]] = None) -> None:
+        """Occupy `node`'s NIC for a background transfer (replica sync,
+        group migration).  Does not block the initiating task."""
+        dt = self.net.transfer_time(nbytes)
+
+        def start():
+            def finish():
+                self.release(node, "nic")
+                self.metrics["background_xfer_s"].append(dt)
+                if done is not None:
+                    done()
+            self.after(dt, finish)
+        self.acquire(node, "nic", start)

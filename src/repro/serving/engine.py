@@ -226,6 +226,58 @@ class ServingEngine:
         lengths = row.lengths.at[slot].add(1)
         return nxt, cache, lengths
 
+    # -- load-aware group rebalancing ---------------------------------------------
+
+    def rebalance(self, imbalance: int = 2, max_moves: int = 1
+                  ) -> List[Tuple[str, int]]:
+        """Move whole session groups off overloaded rows.
+
+        Mirrors the store-side ``GroupMigrator`` at the serving layer: when
+        the hottest row holds `imbalance` more active sessions than the
+        coldest, the smallest group on the hot row is pinned to the cold
+        row.  Sessions follow their group lazily — each member's next turn
+        routes to the new row and pays its state migration there (the
+        engine's existing migration path), so no decode work is interrupted.
+        Returns the (label, destination_row) moves made.
+        """
+        moves: List[Tuple[str, int]] = []
+        # only affinity policies route through the placement engine, so only
+        # they can honor a pin — anything else would report moves that
+        # never take effect
+        if self.router.policy not in ("affinity", "adapter_affinity"):
+            return moves
+        # migration is lazy (groups move on their next turn), so work on
+        # *projected* loads — else the same group gets re-picked each pass
+        loads = [r.load() for r in self.rows]
+        moved_labels = set()
+        for _ in range(max_moves):
+            hot = max(range(len(loads)), key=lambda i: loads[i])
+            cold = min(range(len(loads)), key=lambda i: loads[i])
+            if loads[hot] - loads[cold] < imbalance:
+                break
+            groups: Dict[str, List[Session]] = {}
+            for s in self.sessions.values():
+                if s.row == hot:
+                    lbl = self.router.label_of(s)
+                    if lbl not in moved_labels:
+                        groups.setdefault(lbl, []).append(s)
+            if not groups:
+                break
+            # smallest group that still fits the cold row's free slots
+            free = len(self.rows[cold].active) - loads[cold]
+            cands = sorted(groups.items(), key=lambda kv: len(kv[1]))
+            pick = next(((lbl, ss) for lbl, ss in cands if len(ss) <= free),
+                        None)
+            if pick is None:
+                break
+            label, members = pick
+            self.router.pin_group(label, cold)
+            moved_labels.add(label)
+            loads[hot] -= len(members)
+            loads[cold] += len(members)
+            moves.append((label, cold))
+        return moves
+
     # -- reporting ----------------------------------------------------------------
 
     def summary(self) -> Dict[str, float]:

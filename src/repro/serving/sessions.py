@@ -55,3 +55,19 @@ class SessionRouter:
         desc = Descriptor.of(f"/requests/{request_id}", kind="task",
                              sid=session.sid, adapter=session.adapter)
         return int(self.engine.place(desc).shard)
+
+    # -- group migration (serving side) -------------------------------------
+
+    def label_of(self, session: Session) -> str:
+        """The session's affinity-group label under the active policy."""
+        desc = Descriptor.of(f"/requests/{session.sid}:probe", kind="task",
+                             sid=session.sid, adapter=session.adapter)
+        return self.engine.place(desc).label
+
+    def pin_group(self, label: str, row: int) -> None:
+        """Re-home a whole session group; every member's next turn follows
+        (paying its state migration once) — serving-side GroupMigrator."""
+        self.engine.pin(label, str(row))
+
+    def unpin_group(self, label: str) -> None:
+        self.engine.unpin(label)

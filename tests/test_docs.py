@@ -1,0 +1,72 @@
+"""Documentation is executable: every fenced python snippet in
+docs/affinity_api.md runs, and every fully-qualified `repro.*` name
+mentioned in the docs resolves to a real symbol."""
+import importlib
+import re
+from pathlib import Path
+
+import pytest
+
+DOCS = Path(__file__).resolve().parents[1] / "docs"
+README = Path(__file__).resolve().parents[1] / "README.md"
+
+API_DOC = DOCS / "affinity_api.md"
+ARCH_DOC = DOCS / "architecture.md"
+
+
+def fenced_python_blocks(text: str):
+    return re.findall(r"```python\n(.*?)```", text, re.DOTALL)
+
+
+def qualified_names(text: str):
+    """`repro.x.y.Z`-style names in backticks (strip call suffixes)."""
+    names = set()
+    for m in re.finditer(r"`(repro(?:\.\w+)+)[^`]*`", text):
+        names.add(m.group(1))
+    return sorted(names)
+
+
+def resolve(qualname: str):
+    parts = qualname.split(".")
+    for split in range(len(parts), 0, -1):
+        modname = ".".join(parts[:split])
+        try:
+            obj = importlib.import_module(modname)
+        except ImportError:
+            continue
+        for attr in parts[split:]:
+            obj = getattr(obj, attr)
+        return obj
+    raise ImportError(qualname)
+
+
+def test_docs_exist():
+    assert README.exists()
+    assert API_DOC.exists()
+    assert ARCH_DOC.exists()
+
+
+@pytest.mark.parametrize("doc", [API_DOC, ARCH_DOC])
+def test_all_qualified_names_resolve(doc):
+    names = qualified_names(doc.read_text())
+    assert names, f"{doc.name} should document qualified repro.* symbols"
+    missing = []
+    for qn in names:
+        try:
+            resolve(qn)
+        except (ImportError, AttributeError) as e:
+            missing.append((qn, repr(e)))
+    assert not missing, f"doc names that don't resolve: {missing}"
+
+
+@pytest.mark.parametrize("idx_snippet",
+                         list(enumerate(
+                             fenced_python_blocks(API_DOC.read_text()))),
+                         ids=lambda p: f"snippet{p[0]}")
+def test_api_doc_snippets_run(idx_snippet):
+    _, snippet = idx_snippet
+    exec(compile(snippet, str(API_DOC), "exec"), {"__name__": "__docs__"})
+
+
+def test_readme_names_tier1_command():
+    assert "python -m pytest" in README.read_text()

@@ -1,0 +1,251 @@
+"""Group migration + replication subsystem: whole-group moves, cache
+invalidation, replica-read placement, load-aware binding, runtime charge."""
+import pytest
+
+from repro.core import (CascadeStore, GroupMigrator, HashPlacement,
+                        LoadAwarePlacement, ReplicatedPlacement)
+
+
+def make_store(policy=None, n_nodes=8, n_shards=8):
+    store = CascadeStore([f"n{i}" for i in range(n_nodes)])
+    store.create_object_pool("/p", store.nodes, n_shards,
+                             affinity_set_regex=r"/[a-z0-9]+_[0-9]+_",
+                             policy=policy)
+    return store
+
+
+# -- migration ----------------------------------------------------------------
+
+
+def test_migration_moves_whole_group():
+    store = make_store()
+    for a in (1, 2):
+        for f in range(6):
+            store.put(f"/p/vid_{a}_{f}", b"x" * 100)
+    pool = store.pools["/p"]
+    before = store.shard_of("/p/vid_1_0").name
+    target = next(n for n in pool.shards if n != before)
+    rec = GroupMigrator(store).migrate("/p", "/vid_1_", to_shard=target)
+    assert rec is not None
+    assert rec.n_objects == 6 and rec.bytes_moved == 600
+    # every member homes to the target; collocation invariant intact
+    homes = {store.shard_of(f"/p/vid_1_{f}").name for f in range(6)}
+    assert homes == {target}
+    # the untouched group did not move
+    assert store.shard_of("/p/vid_2_0").name != target or \
+        store.shard_of("/p/vid_2_0").name == \
+        pool.engine.policy.place("/vid_2_", list(pool.shards))
+    # new puts into the group follow the pin (data AND tasks)
+    shard, _ = store.put("/p/vid_1_99", b"x")
+    assert shard.name == target
+    task_shard, _ = store.trigger("/p/vid_1_100")
+    assert task_shard.name == target
+
+
+def test_migration_invalidates_caches_and_charges_stats():
+    store = make_store()
+    for f in range(4):
+        store.put(f"/p/vid_1_{f}", b"x" * 50)
+    home = store.shard_of("/p/vid_1_0")
+    reader = next(n for n in store.nodes if n not in home.nodes)
+    for f in range(4):
+        store.get(f"/p/vid_1_{f}", node=reader)       # warm reader's cache
+    assert store.caches[reader]
+    target = next(n for n in store.pools["/p"].shards if n != home.name)
+    rec = GroupMigrator(store).migrate("/p", "/vid_1_", to_shard=target)
+    assert rec.cache_invalidations == 4
+    assert all(k not in store.caches[reader]
+               for k in store.group_members("/p", "/vid_1_"))
+    assert store.stats.migrations == 1
+    assert store.stats.bytes_migrated == 200
+    # post-migration read returns the *moved* (re-versioned) record
+    r, _ = store.get("/p/vid_1_0", node=reader)
+    assert r.version > 4
+
+
+def test_migrate_noop_when_already_home():
+    store = make_store()
+    store.put("/p/vid_1_0", b"x")
+    home = store.shard_of("/p/vid_1_0").name
+    assert GroupMigrator(store).migrate("/p", "/vid_1_", to_shard=home) is None
+
+
+def test_migrate_noop_for_empty_group():
+    store = make_store()
+    store.put("/p/vid_1_0", b"x")
+    target = next(iter(store.pools["/p"].shards))
+    assert GroupMigrator(store).migrate("/p", "/typo_",
+                                        to_shard=target) is None
+    assert store.stats.migrations == 0
+    assert "/typo_" not in store.pools["/p"].engine.pins
+
+
+def test_hot_group_detection_and_rebalance():
+    store = make_store(n_nodes=4, n_shards=4)
+    for a in range(8):
+        store.put(f"/p/vid_{a}_0", b"x" * 100)
+    # hammer one group remotely -> it becomes the hottest
+    hot_home = store.shard_of("/p/vid_3_0")
+    reader = next(n for n in store.nodes if n not in hot_home.nodes)
+    store.cache_enabled = False
+    for _ in range(50):
+        store.get("/p/vid_3_0", node=reader)
+    mig = GroupMigrator(store, min_heat=1.0)
+    hot = mig.hot_groups("/p")
+    assert hot and hot[0].label == "/vid_3_"
+    heat = mig.shard_heat("/p")
+    assert max(heat.values()) == heat[store.shard_of("/p/vid_3_0").name]
+
+
+# -- replica-read placement ---------------------------------------------------
+
+
+def test_replicated_put_fans_out_and_reads_hit_nearest():
+    store = make_store(policy=ReplicatedPlacement(HashPlacement(),
+                                                  n_replicas=3))
+    store.put("/p/vid_1_0", b"y" * 100)
+    homes = store.pools["/p"].replica_homes("/p/vid_1_0")
+    assert len({h.name for h in homes}) == 3
+    assert store.stats.replica_syncs == 2
+    assert store.stats.bytes_replica_sync == 200
+    store.cache_enabled = False
+    # a member of ANY replica shard reads locally
+    for h in homes:
+        _, local = store.get("/p/vid_1_0", node=h.nodes[0])
+        assert local, h.name
+    # a non-member still pays a remote get
+    outside = next(n for n in store.nodes
+                   if all(n not in h.nodes for h in homes))
+    _, local = store.get("/p/vid_1_0", node=outside)
+    assert not local
+
+
+def test_replicated_group_collocates_per_replica():
+    store = make_store(policy=ReplicatedPlacement(HashPlacement(),
+                                                  n_replicas=2))
+    for f in range(10):
+        store.put(f"/p/vid_7_{f}", b"z" * 10)
+    homesets = [frozenset(h.name for h in
+                          store.pools["/p"].replica_homes(f"/p/vid_7_{f}"))
+                for f in range(10)]
+    assert len(set(homesets)) == 1, "replica set must be group-stable"
+
+
+def test_migration_of_replicated_group():
+    store = make_store(policy=ReplicatedPlacement(HashPlacement(),
+                                                  n_replicas=2))
+    for f in range(5):
+        store.put(f"/p/vid_1_{f}", b"x" * 40)
+    pool = store.pools["/p"]
+    old = {h.name for h in pool.replica_homes("/p/vid_1_0")}
+    target = next(n for n in pool.shards if n not in old)
+    rec = GroupMigrator(store).migrate("/p", "/vid_1_", to_shard=target)
+    assert rec.n_objects == 5
+    new = {h.name for h in pool.replica_homes("/p/vid_1_0")}
+    assert target in new and store.shard_of("/p/vid_1_0").name == target
+    # no replica shard outside the new set still holds group members
+    for name, shard in pool.shards.items():
+        if name not in new:
+            assert not any(k.startswith("/p/vid_1_") for k in shard.objects)
+
+
+# -- load-aware placement -----------------------------------------------------
+
+
+def test_load_aware_spreads_bytes_better_than_worst_case():
+    store = make_store(policy=LoadAwarePlacement(), n_nodes=4, n_shards=4)
+    # skewed group sizes: group a gets (a+1)*5 objects
+    for a in range(8):
+        for f in range((a + 1) * 5):
+            store.put(f"/p/vid_{a}_{f}", b"x" * 100)
+    resident = [sum(r.size for r in s.objects.values())
+                for s in store.pools["/p"].shards.values()]
+    assert min(resident) > 0, "no shard may be left empty under load-aware"
+    assert max(resident) < 3 * min(resident)
+
+
+def test_load_aware_binding_is_sticky():
+    store = make_store(policy=LoadAwarePlacement())
+    store.put("/p/vid_1_0", b"x" * 10)
+    first = store.shard_of("/p/vid_1_0").name
+    # heavy later traffic elsewhere must not move the existing binding
+    for a in range(2, 10):
+        store.put(f"/p/vid_{a}_0", b"x" * 1000)
+    assert store.shard_of("/p/vid_1_1").name == first
+
+
+# -- runtime integration ------------------------------------------------------
+
+
+def test_runtime_migration_terminates_and_charges():
+    from repro.pipelines.rcp.app import Layout, RCPApp
+    from repro.pipelines.rcp.data import make_scene
+    app = RCPApp([make_scene("little3", 40)], Layout(2, 3, 3),
+                 grouped=True, placement="load_aware", migrate_every=0.25)
+    app.stream()
+    app.run()            # must terminate despite the recurring tick
+    s = app.summary(warmup=5)
+    assert s["n"] > 0
+    if s["migrations"]:
+        assert s["bytes_migrated"] > 0
+        assert app.rt.migration_log
+        assert app.rt.sim.metrics["background_xfer_s"], \
+            "migration bytes must be charged as background transfers"
+
+
+def test_queue_pressure_rebalance_unit():
+    """shard_load mode: the busiest group moves off the loaded shard even
+    with zero remote traffic (counter heat would never fire)."""
+    store = make_store(n_nodes=4, n_shards=4)
+    for a in range(8):
+        for f in range(4):
+            store.put(f"/p/vid_{a}_{f}", b"x" * 50)
+    hot = store.shard_of("/p/vid_0_0").name
+    mig = GroupMigrator(store)
+    # no load signal + no remote traffic -> provably no movement
+    assert mig.rebalance("/p") == []
+    load = {name: (20.0 if name == hot else 0.0)
+            for name in store.pools["/p"].shards}
+    moves = mig.rebalance("/p", shard_load=load)
+    assert moves and moves[0].src_shards == [hot]
+    assert store.shard_of("/p" + moves[0].label + "0").name != hot
+    # below the absolute depth floor: transient blips never trigger
+    calm = {name: (mig.min_depth - 1 if name == hot else 0.0)
+            for name in store.pools["/p"].shards}
+    assert mig.rebalance("/p", shard_load=calm) == []
+
+
+def test_queue_pressure_migration_drains_straggler():
+    """A severe straggler creates queue pressure but zero remote traffic;
+    the runtime's shard_load rebalance path must still drain it."""
+    from repro.pipelines.rcp.app import Layout, RCPApp
+    from repro.pipelines.rcp.data import make_scene
+    from repro.runtime.faults import set_straggler
+
+    def build(migrate):
+        app = RCPApp([make_scene("little3", 80)], Layout(2, 3, 3),
+                     grouped=True, placement="load_aware",
+                     migrate_every=0.25 if migrate else None)
+        set_straggler(app.rt, "pred0", 0.05)
+        app.stream()
+        app.run()
+        return app.summary(warmup=10)
+
+    slow = build(migrate=False)
+    fixed = build(migrate=True)
+    assert fixed["migrations"] > 0, \
+        "queue pressure must trigger migration despite zero remote heat"
+    assert fixed["p95"] < slow["p95"], (fixed["p95"], slow["p95"])
+
+
+def test_runtime_replica_sync_charged():
+    from repro.pipelines.rcp.app import Layout, RCPApp
+    from repro.pipelines.rcp.data import make_scene
+    app = RCPApp([make_scene("little3", 40)], Layout(2, 3, 3),
+                 grouped=True, read_replicas=2)
+    app.stream()
+    app.run()
+    s = app.summary(warmup=5)
+    assert s["bytes_replica_sync"] > 0
+    assert app.rt.sim.metrics["background_xfer_s"], \
+        "replica fan-out must occupy NIC time"

@@ -1,8 +1,16 @@
-"""Property-based tests (hypothesis) for the system's invariants."""
+"""Property-based tests (hypothesis) for the system's invariants.
+
+``hypothesis`` is an optional test dependency (see pyproject.toml
+[project.optional-dependencies].test); the module skips cleanly when it
+is not installed so the tier-1 suite always collects.
+"""
 import re
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Descriptor, HashPlacement, RegexAffinity,
                         RendezvousPlacement, GroupSequencer, stable_hash)
