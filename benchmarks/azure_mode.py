@@ -16,8 +16,7 @@ def _build(grouped, n_mot, n_pred, n_cd, frames, seed=0, net=None):
     from repro.core import CascadeStore, stable_hash
     from repro.pipelines.rcp.app import ACTOR_RE, FRAME_RE, Layout, RCPApp
     from repro.pipelines.rcp.data import make_scene
-    from repro.runtime import AZURE_NET
-    from repro.runtime.scheduler import RandomScheduler, Scheduler
+    from repro.runtime import AZURE_NET, RandomScheduler, Scheduler
     net = net or AZURE_NET
 
     class GroupHashScheduler(Scheduler):

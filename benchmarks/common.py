@@ -18,8 +18,7 @@ def run_rcp(grouped, layout, scenes, n_frames, caching=True, net=None,
             read_replicas=1, migrate_every=None, straggler=None):
     from repro.pipelines.rcp.app import Layout, RCPApp
     from repro.pipelines.rcp.data import make_scene
-    from repro.runtime.faults import set_straggler
-    from repro.runtime.scheduler import RandomScheduler
+    from repro.runtime import RandomScheduler, set_straggler
     lay = Layout(*layout, replication=replication)
     kw = {"net": net} if net is not None else {}
     app = RCPApp([make_scene(s, n_frames) for s in scenes], lay,

@@ -8,8 +8,8 @@ import sys
 import time
 
 from . import (azure_mode, fig3_single_client, fig4_three_clients,
-               fig5_no_caching, fig6_replication, micro_affinity,
-               roofline, serving_affinity)
+               fig5_no_caching, fig6_replication, fig7_workflows,
+               micro_affinity, roofline, serving_affinity)
 from .common import emit
 
 SUITES = {
@@ -17,6 +17,7 @@ SUITES = {
     "fig4": fig4_three_clients,
     "fig5": fig5_no_caching,
     "fig6": fig6_replication,
+    "fig7": fig7_workflows,
     "azure": azure_mode,
     "micro": micro_affinity,
     "serving": serving_affinity,

@@ -10,7 +10,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.pipelines.rcp.app import Layout, RCPApp
 from repro.pipelines.rcp.data import make_scene
-from repro.runtime.scheduler import RandomScheduler
+from repro.runtime import RandomScheduler
 
 
 def main():

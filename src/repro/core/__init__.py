@@ -1,7 +1,8 @@
 """The paper's primary contribution: the affinity grouping mechanism."""
 from .affinity import (AffinityFunction, AffinityKey, CallableAffinity,
-                       Descriptor, InstrumentedAffinity, NoAffinity,
-                       RegexAffinity, affinity_key_for)
+                       Descriptor, InstanceAffinity, InstrumentedAffinity,
+                       NoAffinity, RegexAffinity, affinity_key_for,
+                       instance_label, instance_of, workflow_key)
 from .placement import (HashPlacement, LoadAwarePlacement, PlacementEngine,
                         PlacementPolicy, RendezvousPlacement,
                         ReplicatedPlacement, stable_hash)
@@ -15,7 +16,8 @@ from .migration import GroupMigrator, MigrationRecord
 
 __all__ = [
     "AffinityFunction", "AffinityKey", "CallableAffinity", "Descriptor",
-    "InstrumentedAffinity", "NoAffinity", "RegexAffinity", "affinity_key_for",
+    "InstanceAffinity", "InstrumentedAffinity", "NoAffinity", "RegexAffinity",
+    "affinity_key_for", "instance_label", "instance_of", "workflow_key",
     "HashPlacement", "LoadAwarePlacement", "PlacementEngine",
     "PlacementPolicy", "RendezvousPlacement", "ReplicatedPlacement",
     "stable_hash",

@@ -99,6 +99,56 @@ class NoAffinity(AffinityFunction):
         return None
 
 
+# ---------------------------------------------------------------------------
+# Workflow-instance affinity (repro.workflows)
+#
+# A workflow instance is identified by an opaque token (no "_" or "/");
+# every object a workflow stage reads or writes for that instance is keyed
+#
+#     <pool>/<instance>_<stage...>_<i>
+#
+# so the instance token is recoverable from any key and the whole instance
+# forms ONE affinity group across every pool of the workflow.
+# ---------------------------------------------------------------------------
+
+def workflow_key(pool: str, instance: str, stage: str, index: int = 0) -> str:
+    """Canonical key for a workflow-stage output object."""
+    assert "_" not in instance and "/" not in instance, instance
+    return f"{pool.rstrip('/')}/{instance}_{stage}_{index}"
+
+
+def instance_of(key: str) -> Optional[str]:
+    """Instance token of a workflow key (None if the key has no '_')."""
+    leaf = key.rsplit("/", 1)[-1]
+    if "_" not in leaf:
+        return None
+    return leaf.split("_", 1)[0]
+
+
+def instance_label(instance: str) -> AffinityKey:
+    """The affinity key ``InstanceAffinity`` derives for an instance."""
+    return f"/{instance}_"
+
+
+class InstanceAffinity(AffinityFunction):
+    """Affinity key = the workflow-instance token of the key.
+
+    ``/req42_rerank_3`` -> ``/req42_``: every stage input/output of one
+    workflow instance shares a label, so the placement engine collocates
+    the entire instance (and, through unified placement, every stage task
+    that touches it).  Equivalent to ``RegexAffinity(r"/[^_/]+_")`` but
+    named, so pools can be declared instance-grouped without regex
+    plumbing and the gang-pinning path can derive the label it must pin.
+    """
+
+    def __call__(self, desc: Descriptor) -> Optional[AffinityKey]:
+        inst = instance_of(desc.key)
+        return instance_label(inst) if inst else None
+
+    def describe(self) -> str:
+        return "instance"
+
+
 @dataclasses.dataclass
 class AffinityStats:
     """Microbenchmark counters for the matching overhead (paper: <300us)."""

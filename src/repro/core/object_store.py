@@ -150,16 +150,20 @@ class CascadeStore:
     def create_object_pool(self, prefix: str, nodes: Sequence[str],
                            n_shards: int, replication: int = 1,
                            affinity_set_regex: Optional[str] = None,
-                           policy: Optional[PlacementPolicy] = None
+                           policy: Optional[PlacementPolicy] = None,
+                           affinity_fn: Optional[AffinityFunction] = None
                            ) -> ObjectPool:
         assert prefix not in self.pools, prefix
         assert len(nodes) >= n_shards * replication, \
             (prefix, len(nodes), n_shards, replication)
+        assert not (affinity_set_regex and affinity_fn), \
+            "pass either affinity_set_regex or affinity_fn, not both"
         shards = []
         for i in range(n_shards):
             members = nodes[i * replication:(i + 1) * replication]
             shards.append(Shard(f"{prefix}#s{i}", members))
-        fn = RegexAffinity(affinity_set_regex) if affinity_set_regex else None
+        fn = (RegexAffinity(affinity_set_regex) if affinity_set_regex
+              else affinity_fn)
         pool = ObjectPool(prefix, shards, fn, policy)
         self.pools[prefix] = pool
         return pool

@@ -19,12 +19,9 @@ import dataclasses
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
-from repro.core import (CascadeStore, HashPlacement, LoadAwarePlacement,
-                        RendezvousPlacement, ReplicatedPlacement)
-from repro.core.placement import PlacementPolicy
 from repro.runtime import (CLUSTER_NET, Compute, Get, NetProfile, Put,
-                           ReplicaScheduler, Runtime, ShardLocalScheduler)
-from repro.runtime.scheduler import Scheduler
+                           Scheduler)
+from repro.workflows import Emit, WorkflowGraph, WorkflowRuntime
 from .data import (FRAME_BYTES, P_HIST, POSITION_BYTES, PREDICTION_BYTES,
                    Scene, make_scene)
 from .models import StageProfile
@@ -98,77 +95,61 @@ class RCPApp:
         self.profile = profile or StageProfile()
         self.tracker = FrameTracker()
 
-        # nodes: one physical server per shard slot (paper: 1 node/shard
-        # unless replication>1), GPU on MOT/PRED servers (config A), CD on
-        # config B (cpu).
+        self.graph = self.build_graph(layout)
+        self.wrt = WorkflowRuntime(self.graph, grouped=grouped,
+                                   placement=placement,
+                                   read_replicas=read_replicas,
+                                   caching=caching, net=net,
+                                   scheduler=scheduler, seed=seed,
+                                   migrate_every=migrate_every)
+        self.rt = self.wrt.rt
+        self.store = self.wrt.store
+        self.mot_nodes = self.graph.tiers["mot"].nodes
+        self.pred_nodes = self.graph.tiers["pred"].nodes
+        self.cd_nodes = self.graph.tiers["cd"].nodes
+
+    def build_graph(self, layout: Layout) -> WorkflowGraph:
+        """RCP as a declarative workflow graph (Table 1 pools/regexes).
+
+        The stage bodies stay custom generators — actors enter and leave,
+        so the fan-out is dynamic and the app keeps its own FrameTracker
+        (``instance_tracking=False``).  Emits are declared with fanout=1 as
+        structural edges only: they give the graph its MOT→PRED→CD shape
+        (validation, docs) while the bodies decide the real fan-out.
+
+        Nodes: one physical server per shard slot (paper: 1 node/shard
+        unless replication>1), GPU on MOT/PRED servers (config A), CD on
+        config B (cpu).
+        """
         r = layout.replication
-        self.mot_nodes = [f"mot{i}" for i in range(layout.mot * r)]
-        self.pred_nodes = [f"pred{i}" for i in range(layout.pred * r)]
-        self.cd_nodes = [f"cd{i}" for i in range(layout.cd * r)]
-        nodes = self.mot_nodes + self.pred_nodes + self.cd_nodes
-        store = CascadeStore(nodes)
-        store.cache_enabled = caching
-
-        regex = (lambda p: p) if grouped else (lambda p: None)
-
-        def make_policy(n_shards: int) -> PlacementPolicy:
-            base = {"hash": HashPlacement,
-                    "load_aware": LoadAwarePlacement,
-                    "rendezvous": RendezvousPlacement}[placement]()
-            if read_replicas > 1:
-                return ReplicatedPlacement(
-                    base, n_replicas=min(read_replicas, n_shards))
-            return base
-
-        store.create_object_pool("/frames", self.mot_nodes, layout.mot,
-                                 replication=r,
-                                 affinity_set_regex=regex(FRAME_RE),
-                                 policy=make_policy(layout.mot))
-        store.create_object_pool("/states", self.mot_nodes, layout.mot,
-                                 replication=r,
-                                 affinity_set_regex=regex(FRAME_RE),
-                                 policy=make_policy(layout.mot))
-        store.create_object_pool("/positions", self.pred_nodes, layout.pred,
-                                 replication=r,
-                                 affinity_set_regex=regex(ACTOR_RE),
-                                 policy=make_policy(layout.pred))
-        store.create_object_pool("/predictions", self.cd_nodes, layout.cd,
-                                 replication=r,
-                                 affinity_set_regex=regex(ACTOR_RE),
-                                 policy=make_policy(layout.cd))
-        store.create_object_pool("/cd", self.cd_nodes, layout.cd,
-                                 replication=r,
-                                 policy=make_policy(layout.cd))
-
-        resources = {}
-        for n in self.mot_nodes + self.pred_nodes:
-            resources[n] = {"gpu": 1, "cpu": 2, "nic": 2}
-        for n in self.cd_nodes:
-            resources[n] = {"gpu": 0, "cpu": 2, "nic": 2}
-
-        if scheduler is None:
-            scheduler = (ReplicaScheduler(store) if read_replicas > 1
-                         else ShardLocalScheduler())
-        self.rt = Runtime(store, resources, net=net, scheduler=scheduler,
-                          seed=seed)
-        self.store = store
-        if migrate_every is not None:
-            self.rt.enable_migration("/positions", interval=migrate_every)
-            self.rt.enable_migration("/predictions", interval=migrate_every)
-
-        self.rt.register("/frames", self._mot_task,
-                         order_of=lambda k: k.split("/")[-1].rsplit("_", 1)[0],
-                         resource="gpu", pool_nodes=self.mot_nodes,
-                         name="MOT")
-        self.rt.register("/positions", self._pred_task,
-                         order_of=lambda k: k.split("/")[-1].rsplit("_", 1)[0],
-                         resource="gpu", pool_nodes=self.pred_nodes,
-                         name="PRED")
-        self.rt.register("/predictions", self._cd_task,
-                         order_of=lambda k: "_".join(
-                             k.split("/")[-1].split("_")[:2]),
-                         resource="cpu", pool_nodes=self.cd_nodes,
-                         name="CD")
+        g = WorkflowGraph("rcp", instance_tracking=False)
+        g.add_tier("mot", layout.mot * r, {"gpu": 1, "cpu": 2, "nic": 2})
+        g.add_tier("pred", layout.pred * r, {"gpu": 1, "cpu": 2, "nic": 2})
+        g.add_tier("cd", layout.cd * r, {"gpu": 0, "cpu": 2, "nic": 2})
+        g.add_pool("/frames", tier="mot", shards=layout.mot,
+                   replication=r, affinity=FRAME_RE)
+        g.add_pool("/states", tier="mot", shards=layout.mot,
+                   replication=r, affinity=FRAME_RE)
+        g.add_pool("/positions", tier="pred", shards=layout.pred,
+                   replication=r, affinity=ACTOR_RE, migratable=True)
+        g.add_pool("/predictions", tier="cd", shards=layout.cd,
+                   replication=r, affinity=ACTOR_RE, migratable=True)
+        g.add_pool("/cd", tier="cd", shards=layout.cd,
+                   replication=r, affinity=None)
+        g.add_stage("MOT", pool="/frames", resource="gpu",
+                    body=self._mot_task,
+                    order_of=lambda k: k.split("/")[-1].rsplit("_", 1)[0],
+                    emits=[Emit("/states"), Emit("/positions")])
+        g.add_stage("PRED", pool="/positions", resource="gpu",
+                    body=self._pred_task,
+                    order_of=lambda k: k.split("/")[-1].rsplit("_", 1)[0],
+                    emits=[Emit("/predictions")])
+        g.add_stage("CD", pool="/predictions", resource="cpu",
+                    body=self._cd_task,
+                    order_of=lambda k: "_".join(
+                        k.split("/")[-1].split("_")[:2]),
+                    emits=[Emit("/cd")], sink=True)
+        return g.validate()
 
     # -- stage tasks (generator UDLs) ---------------------------------------
 

@@ -186,10 +186,16 @@ class Runtime:
     # -- client ingress --------------------------------------------------------------
 
     def client_put(self, at: float, key: str, value: Any = None,
-                   size: int = 0, client_node: str = "client") -> None:
-        """Schedule an external put at simulated time `at`."""
+                   size: int = 0, client_node: str = "client",
+                   fire_udls: bool = True) -> None:
+        """Schedule an external put at simulated time `at`.
+
+        ``fire_udls=False`` stores without triggering (used to preload
+        shared objects — e.g. a workflow's retrieval index — before any
+        event stream starts)."""
         def fire():
-            shard, udls = self.store.put(key, value, size=size)
+            shard, udls = self.store.put(key, value, size=size,
+                                         fire=fire_udls)
             dt = self.sim.net.transfer_time(size)
 
             def delivered():

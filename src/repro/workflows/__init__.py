@@ -1,0 +1,14 @@
+"""Event-triggered workflow graphs over affinity groups (paper §2, §4.5)."""
+from .graph import (INSTANCE, Emit, Pool, Read, Stage, Tier, WorkflowGraph,
+                    WorkflowGraphError)
+from .runtime import InstanceRecord, InstanceTracker, WorkflowRuntime
+from .library import (WORKFLOW_SHAPES, index_keys, mode_kwargs,
+                      preload_index, rag_workflow, speech_workflow)
+
+__all__ = [
+    "INSTANCE", "Emit", "Pool", "Read", "Stage", "Tier", "WorkflowGraph",
+    "WorkflowGraphError",
+    "InstanceRecord", "InstanceTracker", "WorkflowRuntime",
+    "WORKFLOW_SHAPES", "index_keys", "mode_kwargs", "preload_index",
+    "rag_workflow", "speech_workflow",
+]

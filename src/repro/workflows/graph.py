@@ -1,0 +1,272 @@
+"""Declarative workflow graphs (paper §2, §4.5: "a pipeline or graph of AI
+programs triggered by events").
+
+A :class:`WorkflowGraph` names the pieces an event-driven inference
+application is made of, without wiring any of them by hand:
+
+  * **tiers** — named groups of homogeneous nodes (``mot0..motN``) with a
+    resource vector, the deployment units stages run on;
+  * **pools** — pathname-prefixed object pools bound to a tier, each with a
+    shard count/replication and an affinity mode (``INSTANCE`` groups every
+    key of one workflow instance, a regex reproduces the paper's Table 1
+    behavior, ``None`` leaves the pool ungrouped);
+  * **stages** — event-triggered units of work.  A stage is fired by puts
+    into its trigger pool; it either supplies a custom generator ``body``
+    (arbitrary logic, like the RCP stages) or is synthesized from its
+    declarative ``reads``/``cost``/``emits``.  ``join=True`` makes the
+    stage a fan-in barrier: its body runs once per instance, after every
+    expected upstream event has arrived.
+
+Edges are implicit: stage A ``emits`` into pool P, stage B is triggered by
+P.  :meth:`WorkflowGraph.validate` checks the induced stage graph is a DAG,
+computes each stage's expected per-instance arrival count (fan-out
+bookkeeping the RCP app previously hand-rolled in ``FrameTracker``), and
+identifies sources and sinks.  The graph itself is timeless and
+placement-agnostic — ``repro.workflows.runtime.WorkflowRuntime`` compiles
+it onto the store/simulator and owns every placement decision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+# Affinity mode sentinel: group every key of a workflow instance together
+# (see repro.core.affinity.InstanceAffinity).
+INSTANCE = "instance"
+
+
+@dataclasses.dataclass
+class Tier:
+    """A named group of homogeneous nodes (``<name>0 .. <name>{n-1}``)."""
+    name: str
+    n_nodes: int
+    resources: Dict[str, int]
+
+    @property
+    def nodes(self) -> List[str]:
+        return [f"{self.name}{i}" for i in range(self.n_nodes)]
+
+
+@dataclasses.dataclass
+class Pool:
+    """An object pool declaration (compiled to ``create_object_pool``)."""
+    prefix: str
+    tier: str
+    shards: int
+    replication: int = 1
+    affinity: Optional[str] = INSTANCE   # INSTANCE | regex string | None
+    migratable: bool = False             # opt into Runtime.enable_migration
+
+
+@dataclasses.dataclass
+class Read:
+    """An extra per-firing read (e.g. a shared retrieval index).
+
+    ``keys(instance)`` returns the full keys to fetch; misses are treated
+    as optional unless ``required``.
+    """
+    pool: str
+    keys: Callable[[str], Sequence[str]]
+    required: bool = False
+    wait: bool = False
+
+
+@dataclasses.dataclass
+class Emit:
+    """A write edge: each firing puts ``fanout`` objects into ``pool``."""
+    pool: str
+    fanout: int = 1
+    size: int = 0
+
+
+@dataclasses.dataclass
+class Stage:
+    """An event-triggered stage.
+
+    Synthesized stages (``body=None``) read their join inputs + declared
+    ``reads``, spend ``cost`` seconds on ``resource``, then ``emit``.
+    Custom-body stages run the supplied generator verbatim (yielding the
+    runtime's Get/Put/Compute ops) — the graph still records their
+    trigger pool, resource and ordering so compilation stays uniform.
+    """
+    name: str
+    pool: str                             # trigger pool prefix
+    resource: str = "gpu"
+    cost: float = 0.0
+    reads: List[Read] = dataclasses.field(default_factory=list)
+    emits: List[Emit] = dataclasses.field(default_factory=list)
+    join: bool = False                    # fan-in barrier (fire once/instance)
+    sink: bool = False                    # completing this completes the inst
+    body: Optional[Callable[..., Any]] = None
+    order_of: Optional[Callable[[str], str]] = None
+
+    # filled in by WorkflowGraph.validate()
+    expected_arrivals: int = 1            # events/instance into this stage
+    firings: int = 1                      # body executions/instance
+
+
+class WorkflowGraphError(ValueError):
+    pass
+
+
+class WorkflowGraph:
+    """Declarative container + validator for tiers/pools/stages."""
+
+    def __init__(self, name: str, instance_tracking: bool = True):
+        self.name = name
+        # False: the application does its own accounting (the RCP port
+        # keeps its FrameTracker and dynamic per-frame fan-out)
+        self.instance_tracking = instance_tracking
+        self.tiers: Dict[str, Tier] = {}
+        self.pools: List[Pool] = []
+        self.stages: List[Stage] = []
+        self._validated = False
+
+    # -- declaration -------------------------------------------------------
+
+    def add_tier(self, name: str, n_nodes: int,
+                 resources: Dict[str, int]) -> Tier:
+        if name in self.tiers:
+            raise WorkflowGraphError(f"duplicate tier {name!r}")
+        tier = Tier(name, n_nodes, dict(resources))
+        self.tiers[name] = tier
+        return tier
+
+    def add_pool(self, prefix: str, tier: str, shards: int,
+                 replication: int = 1, affinity: Optional[str] = INSTANCE,
+                 migratable: bool = False) -> Pool:
+        if tier not in self.tiers:
+            raise WorkflowGraphError(f"pool {prefix!r}: unknown tier {tier!r}")
+        if any(p.prefix == prefix for p in self.pools):
+            raise WorkflowGraphError(f"duplicate pool {prefix!r}")
+        t = self.tiers[tier]
+        if t.n_nodes < shards * replication:
+            raise WorkflowGraphError(
+                f"pool {prefix!r}: tier {tier!r} has {t.n_nodes} nodes "
+                f"< {shards} shards x {replication} replication")
+        pool = Pool(prefix, tier, shards, replication, affinity, migratable)
+        self.pools.append(pool)
+        self._validated = False
+        return pool
+
+    def add_stage(self, name: str, pool: str, resource: str = "gpu",
+                  cost: float = 0.0, reads: Sequence[Read] = (),
+                  emits: Sequence[Emit] = (), join: bool = False,
+                  sink: bool = False, body: Optional[Callable] = None,
+                  order_of: Optional[Callable[[str], str]] = None) -> Stage:
+        if any(s.name == name for s in self.stages):
+            raise WorkflowGraphError(f"duplicate stage {name!r}")
+        stage = Stage(name=name, pool=pool, resource=resource, cost=cost,
+                      reads=list(reads), emits=list(emits), join=join,
+                      sink=sink, body=body, order_of=order_of)
+        self.stages.append(stage)
+        self._validated = False
+        return stage
+
+    # -- derived structure --------------------------------------------------
+
+    def pool_of(self, prefix: str) -> Pool:
+        for p in self.pools:
+            if p.prefix == prefix:
+                return p
+        raise WorkflowGraphError(f"unknown pool {prefix!r}")
+
+    def stages_on(self, pool: str) -> List[Stage]:
+        return [s for s in self.stages if s.pool == pool]
+
+    @property
+    def source_stages(self) -> List[Stage]:
+        """Stages triggered only by external (client) events."""
+        emitted = {e.pool for s in self.stages for e in s.emits}
+        return [s for s in self.stages if s.pool not in emitted]
+
+    @property
+    def sink_stages(self) -> List[Stage]:
+        marked = [s for s in self.stages if s.sink]
+        if marked:
+            return marked
+        triggers = {s.pool for s in self.stages}
+        return [s for s in self.stages
+                if not any(e.pool in triggers for e in s.emits)]
+
+    @property
+    def source_pool(self) -> str:
+        """The pool external events are submitted to."""
+        src = self.source_stages
+        if len(src) != 1:
+            raise WorkflowGraphError(
+                f"workflow {self.name!r} needs exactly one source stage, "
+                f"has {[s.name for s in src]}")
+        return src[0].pool
+
+    def validate(self) -> "WorkflowGraph":
+        """Check the stage DAG and fill in fan-in/fan-out accounting."""
+        pool_names = {p.prefix for p in self.pools}
+        for s in self.stages:
+            if s.pool not in pool_names:
+                raise WorkflowGraphError(
+                    f"stage {s.name!r}: unknown trigger pool {s.pool!r}")
+            for e in s.emits:
+                if e.pool not in pool_names:
+                    raise WorkflowGraphError(
+                        f"stage {s.name!r}: emits into unknown pool "
+                        f"{e.pool!r}")
+                if e.fanout < 1:
+                    raise WorkflowGraphError(
+                        f"stage {s.name!r}: fanout {e.fanout} < 1")
+            if s.body is not None and (s.reads or s.emits) and \
+                    self.instance_tracking:
+                raise WorkflowGraphError(
+                    f"stage {s.name!r}: custom body and declarative "
+                    f"reads/emits are mutually exclusive under tracking")
+        if not self.stages:
+            raise WorkflowGraphError(f"workflow {self.name!r} has no stages")
+
+        # topological order over the stage graph (emit -> trigger edges)
+        downstream = {s.name: sorted({d.name for e in s.emits
+                                      for d in self.stages_on(e.pool)})
+                      for s in self.stages}
+        indeg = {s.name: 0 for s in self.stages}
+        for outs in downstream.values():
+            for d in outs:
+                indeg[d] += 1
+        order = [n for n, d in indeg.items() if d == 0]
+        topo: List[str] = []
+        while order:
+            n = order.pop(0)
+            topo.append(n)
+            for d in downstream[n]:
+                indeg[d] -= 1
+                if indeg[d] == 0:
+                    order.append(d)
+        if len(topo) != len(self.stages):
+            cyc = sorted(set(s.name for s in self.stages) - set(topo))
+            raise WorkflowGraphError(
+                f"workflow {self.name!r} has a trigger cycle through {cyc}")
+        src = self.source_stages
+        if self.instance_tracking and len(src) != 1:
+            raise WorkflowGraphError(
+                f"workflow {self.name!r} needs exactly one source stage, "
+                f"has {[s.name for s in src]}")
+
+        # per-instance fan-in/fan-out accounting
+        by_name = {s.name: s for s in self.stages}
+        src_names = {s.name for s in src}
+        for s in self.stages:
+            s.expected_arrivals = 1 if s.name in src_names else 0
+        for name in topo:
+            s = by_name[name]
+            s.firings = (1 if (s.join or s.name in src_names)
+                         else s.expected_arrivals)
+            for e in s.emits:
+                for d in self.stages_on(e.pool):
+                    d.expected_arrivals += s.firings * e.fanout
+        for s in self.stages:
+            if s.expected_arrivals < 1:
+                raise WorkflowGraphError(
+                    f"stage {s.name!r} is unreachable (no events arrive)")
+        if self.instance_tracking and not self.sink_stages:
+            raise WorkflowGraphError(
+                f"workflow {self.name!r} has no sink stage")
+        self._validated = True
+        return self

@@ -1,0 +1,120 @@
+"""Example workflow graphs exercised by tests and ``benchmarks/fig7``.
+
+Two shapes beyond the paper's RCP pipeline, picked to stress the two graph
+features RCP does not use:
+
+  * :func:`rag_workflow` — retrieve -> rerank -> generate.  A linear
+    pipeline with a *fan-out/fan-in bulge* in the middle (retrieve emits
+    ``n_docs`` candidate passages, rerank joins them) and a **shared-index
+    hot group**: every retrieve reads the same corpus slabs, which form a
+    single affinity group pinned to one shard — the canonical "popular
+    object" the paper's replication extension targets (``read_replicas``
+    spreads it).
+
+  * :func:`speech_workflow` — asr -> {intent, diarize} -> action.  One
+    event fans out to two parallel stages on different resources (GPU
+    intent model, CPU diarizer) whose outputs a join barrier merges.
+
+Costs are paper-scale service times (milliseconds), object sizes chosen so
+placement matters: scattering a workflow instance across shards pays
+multi-MB transfers on every edge, exactly like RCP's frames.
+"""
+from __future__ import annotations
+
+from repro.core import workflow_key
+from .graph import INSTANCE, Emit, Read, WorkflowGraph
+
+# shared retrieval index: one slab per part, all in one affinity group
+INDEX_PARTS = 4
+INDEX_SLAB_BYTES = 4 * 1024 * 1024
+
+
+def index_keys(n_parts: int = INDEX_PARTS):
+    """Keys of the shared corpus slabs (instance token: ``corpus``)."""
+    return [workflow_key("/index", "corpus", "slab", j)
+            for j in range(n_parts)]
+
+
+def rag_workflow(shards: int = 4, replication: int = 1,
+                 n_docs: int = 6) -> WorkflowGraph:
+    """retrieve -> rerank (join n_docs) -> generate, with a shared index."""
+    g = WorkflowGraph("rag")
+    g.add_tier("rag", shards * replication,
+               {"gpu": 1, "cpu": 2, "nic": 2})
+    g.add_pool("/queries", tier="rag", shards=shards,
+               replication=replication, affinity=INSTANCE)
+    g.add_pool("/index", tier="rag", shards=shards,
+               replication=replication, affinity=INSTANCE)
+    g.add_pool("/cands", tier="rag", shards=shards,
+               replication=replication, affinity=INSTANCE, migratable=True)
+    g.add_pool("/ranked", tier="rag", shards=shards,
+               replication=replication, affinity=INSTANCE)
+    g.add_pool("/answers", tier="rag", shards=shards,
+               replication=replication, affinity=INSTANCE)
+    g.add_stage("retrieve", pool="/queries", resource="cpu", cost=0.004,
+                reads=[Read("/index", keys=lambda inst: index_keys())],
+                emits=[Emit("/cands", fanout=n_docs,
+                            size=2 * 1024 * 1024)])
+    g.add_stage("rerank", pool="/cands", resource="gpu", cost=0.008,
+                join=True,
+                emits=[Emit("/ranked", fanout=1, size=1024 * 1024)])
+    g.add_stage("generate", pool="/ranked", resource="gpu", cost=0.030,
+                emits=[Emit("/answers", fanout=1, size=16 * 1024)],
+                sink=True)
+    return g.validate()
+
+
+def preload_index(wrt, n_parts: int = INDEX_PARTS,
+                  slab_bytes: int = INDEX_SLAB_BYTES) -> None:
+    """Seed the shared corpus slabs before streaming queries."""
+    for k in index_keys(n_parts):
+        wrt.preload(k, ("slab", k), size=slab_bytes)
+
+
+def speech_workflow(shards: int = 4, replication: int = 1) -> WorkflowGraph:
+    """asr -> {intent (gpu), diarize (cpu)} -> action (join 2)."""
+    g = WorkflowGraph("speech")
+    g.add_tier("speech", shards * replication,
+               {"gpu": 1, "cpu": 2, "nic": 2})
+    g.add_pool("/audio", tier="speech", shards=shards,
+               replication=replication, affinity=INSTANCE)
+    g.add_pool("/text", tier="speech", shards=shards,
+               replication=replication, affinity=INSTANCE, migratable=True)
+    g.add_pool("/acts", tier="speech", shards=shards,
+               replication=replication, affinity=INSTANCE)
+    g.add_pool("/out", tier="speech", shards=shards,
+               replication=replication, affinity=INSTANCE)
+    g.add_stage("asr", pool="/audio", resource="gpu", cost=0.020,
+                emits=[Emit("/text", fanout=1, size=4 * 1024 * 1024)])
+    g.add_stage("intent", pool="/text", resource="gpu", cost=0.006,
+                emits=[Emit("/acts", fanout=1, size=256 * 1024)])
+    g.add_stage("diarize", pool="/text", resource="cpu", cost=0.010,
+                emits=[Emit("/acts", fanout=1, size=256 * 1024)])
+    g.add_stage("action", pool="/acts", resource="cpu", cost=0.003,
+                join=True, emits=[Emit("/out", fanout=1, size=2048)],
+                sink=True)
+    return g.validate()
+
+
+WORKFLOW_SHAPES = {
+    "rag": rag_workflow,
+    "speech": speech_workflow,
+}
+
+
+def mode_kwargs(mode: str) -> dict:
+    """WorkflowRuntime kwargs for the canonical placement-mode names.
+
+    ``keyhash`` (ungrouped raw key-hash baseline), ``affinity`` (instance
+    groups, hash-of-label), ``atomic`` (instance groups + load-aware gang
+    pinning); a ``+mig`` suffix adds the migration driver on migratable
+    pools.  One definition so benchmarks, examples, and tests sweep the
+    exact same configurations.
+    """
+    base, _, mig = mode.partition("+")
+    if base not in ("keyhash", "affinity", "atomic") or _ and mig != "mig":
+        raise ValueError(f"unknown workflow placement mode {mode!r}")
+    return dict(grouped=base != "keyhash",
+                placement="load_aware" if base == "atomic" else "hash",
+                gang_pin=base == "atomic",
+                migrate_every=0.2 if mig == "mig" else None)

@@ -1,0 +1,352 @@
+"""Compile a WorkflowGraph onto the store + DES runtime.
+
+``WorkflowRuntime`` is the workflow layer's only imperative piece: it
+turns a validated :class:`~repro.workflows.graph.WorkflowGraph` into
+
+  * one node per tier slot with the tier's resource vector,
+  * one ``CascadeStore`` object pool per declared pool — instance-grouped
+    pools get :class:`repro.core.affinity.InstanceAffinity`, so every key
+    of a workflow instance shares one affinity label across every pool,
+  * one registered UDL per stage (custom generator bodies verbatim;
+    declarative stages synthesized into Get/Compute/Put op streams with
+    join-barrier fan-in),
+  * optional ``GroupMigrator`` ticks on pools marked ``migratable``.
+
+**Workflow-atomic placement** (SAGA-style): with ``gang_pin=True`` each
+``submit`` installs, at its virtual admission time, a ``PlacementEngine``
+pin for the instance's label in *every* instance-grouped pool, all on the
+same shard slot.  The slot is chosen by the anchor pool's policy (so a
+``load_aware`` policy yields admission-time least-loaded gang placement),
+and because data and compute flow through the same engine, the pin drags
+the whole instance — objects *and* stage tasks — onto one slot.
+
+``InstanceTracker`` does the per-instance accounting the RCP app used to
+hand-roll: join-barrier arrival counts, per-stage spans, end-to-end
+latency, and deadline/SLO hits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import (CascadeStore, HashPlacement, InstanceAffinity,
+                        LoadAwarePlacement, RendezvousPlacement,
+                        ReplicatedPlacement, instance_label, instance_of,
+                        workflow_key)
+from repro.core.placement import PlacementPolicy
+from repro.runtime import (CLUSTER_NET, Compute, Get, NetProfile, Put,
+                           ReplicaScheduler, Runtime, Scheduler,
+                           ShardLocalScheduler)
+from .graph import INSTANCE, Stage, WorkflowGraph
+
+POLICIES = {"hash": HashPlacement,
+            "load_aware": LoadAwarePlacement,
+            "rendezvous": RendezvousPlacement}
+
+
+# ---------------------------------------------------------------------------
+# Per-instance accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class InstanceRecord:
+    instance: str
+    t_submit: float
+    deadline: Optional[float] = None          # absolute virtual time
+    t_complete: Optional[float] = None
+    arrivals: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    inputs: Dict[str, List[str]] = dataclasses.field(
+        default_factory=lambda: defaultdict(list))
+    fired: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    done: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.t_complete is None:
+            return None
+        return self.t_complete - self.t_submit
+
+    @property
+    def missed_deadline(self) -> bool:
+        return (self.deadline is not None and self.t_complete is not None
+                and self.t_complete > self.deadline)
+
+
+class InstanceTracker:
+    """Fan-in counters + end-to-end / per-stage latency accounting."""
+
+    def __init__(self, graph: WorkflowGraph):
+        self.graph = graph
+        self.records: Dict[str, InstanceRecord] = {}
+        self.stage_spans: Dict[str, List[float]] = defaultdict(list)
+        self._sinks = {s.name: s.firings for s in graph.sink_stages}
+
+    def admit(self, instance: str, t: float,
+              deadline: Optional[float] = None) -> InstanceRecord:
+        assert instance not in self.records, f"duplicate submit {instance!r}"
+        rec = InstanceRecord(
+            instance=instance, t_submit=t,
+            deadline=(t + deadline) if deadline is not None else None)
+        self.records[instance] = rec
+        return rec
+
+    def arrive(self, instance: str, stage: str, key: str,
+               t: float) -> InstanceRecord:
+        rec = self.records[instance]
+        rec.arrivals[stage] += 1
+        rec.inputs[stage].append(key)
+        return rec
+
+    def fire(self, instance: str, stage: str) -> int:
+        """Record a body execution; returns the 0-based firing index."""
+        rec = self.records[instance]
+        seq = rec.fired[stage]
+        rec.fired[stage] = seq + 1
+        return seq
+
+    def stage_done(self, instance: str, stage: str, t0: float,
+                   t1: float) -> None:
+        rec = self.records[instance]
+        rec.done[stage] += 1
+        self.stage_spans[stage].append(t1 - t0)
+        if rec.t_complete is None and all(
+                rec.done.get(s, 0) >= n for s, n in self._sinks.items()):
+            rec.t_complete = t1
+
+    # -- results -----------------------------------------------------------
+
+    def latencies(self) -> List[float]:
+        return [r.latency for r in self.records.values()
+                if r.latency is not None]
+
+    def summary(self) -> Dict[str, Any]:
+        import numpy as np
+        lats = self.latencies()
+        out: Dict[str, Any] = {
+            "n_submitted": len(self.records),
+            "n": len(lats),
+        }
+        if lats:
+            arr = np.array(lats)
+            out.update(median=float(np.median(arr)),
+                       p75=float(np.percentile(arr, 75)),
+                       p95=float(np.percentile(arr, 95)),
+                       p99=float(np.percentile(arr, 99)),
+                       mean=float(arr.mean()))
+        with_deadline = [r for r in self.records.values()
+                         if r.deadline is not None]
+        if with_deadline:
+            misses = sum(1 for r in with_deadline
+                         if r.missed_deadline or r.t_complete is None)
+            out["slo_misses"] = misses
+            out["slo_miss_rate"] = misses / len(with_deadline)
+        out["stages"] = {
+            s: {"n": len(v),
+                "median": float(np.median(v)),
+                "p99": float(np.percentile(v, 99))}
+            for s, v in self.stage_spans.items() if v}
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The compiler / driver
+# ---------------------------------------------------------------------------
+
+class WorkflowRuntime:
+    """Compile ``graph`` and drive event-triggered instances through it.
+
+    Placement knobs mirror the RCP app so every workflow can run the same
+    sweeps: ``grouped=False`` drops affinity functions (raw key-hash
+    baseline), ``placement`` picks the per-pool policy, ``read_replicas``
+    wraps it in ``ReplicatedPlacement``, ``migrate_every`` enables the
+    migration driver on pools marked migratable, and ``gang_pin`` turns on
+    workflow-atomic admission.
+    """
+
+    def __init__(self, graph: WorkflowGraph, *, grouped: bool = True,
+                 placement: str = "hash", read_replicas: int = 1,
+                 caching: bool = True, net: NetProfile = CLUSTER_NET,
+                 scheduler: Optional[Scheduler] = None, seed: int = 0,
+                 migrate_every: Optional[float] = None,
+                 gang_pin: bool = False,
+                 anchor_pool: Optional[str] = None,
+                 unpin_on_complete: bool = False):
+        if not graph._validated:
+            graph.validate()
+        assert not (gang_pin and not grouped), \
+            "gang_pin needs instance affinity (grouped=True)"
+        self.graph = graph
+        self.grouped = grouped
+        self.placement = placement
+        self.read_replicas = read_replicas
+        self.gang_pin = gang_pin
+        self.unpin_on_complete = unpin_on_complete
+        self.tracker = InstanceTracker(graph)
+
+        nodes: List[str] = []
+        resources: Dict[str, Dict[str, int]] = {}
+        for tier in graph.tiers.values():
+            for n in tier.nodes:
+                nodes.append(n)
+                resources[n] = dict(tier.resources)
+        store = CascadeStore(nodes)
+        store.cache_enabled = caching
+
+        instance_pools: List[str] = []
+        for pool in graph.pools:
+            tier = graph.tiers[pool.tier]
+            regex = None
+            fn = None
+            if grouped and pool.affinity == INSTANCE:
+                fn = InstanceAffinity()
+                instance_pools.append(pool.prefix)
+            elif grouped and pool.affinity is not None:
+                regex = pool.affinity
+            store.create_object_pool(pool.prefix, tier.nodes, pool.shards,
+                                     replication=pool.replication,
+                                     affinity_set_regex=regex,
+                                     policy=self._make_policy(pool.shards),
+                                     affinity_fn=fn)
+        self._instance_pools = instance_pools
+        if anchor_pool is None and instance_pools:
+            anchor_pool = instance_pools[0]
+        self.anchor_pool = anchor_pool
+        assert not gang_pin or anchor_pool is not None, \
+            "gang_pin needs at least one instance-affinity pool"
+        if gang_pin:
+            # the slot chosen on the anchor must mean the same thing in
+            # every pinned pool — unequal shard counts would leave the
+            # higher slots of bigger pools permanently unused
+            counts = {p.prefix: p.shards for p in graph.pools
+                      if p.prefix in instance_pools}
+            assert len(set(counts.values())) == 1, \
+                f"gang_pin needs equal shard counts across " \
+                f"instance-grouped pools, got {counts}"
+
+        if scheduler is None:
+            scheduler = (ReplicaScheduler(store) if read_replicas > 1
+                         else ShardLocalScheduler())
+        self.rt = Runtime(store, resources, net=net, scheduler=scheduler,
+                          seed=seed)
+        self.store = store
+        if migrate_every is not None:
+            for pool in graph.pools:
+                if pool.migratable:
+                    self.rt.enable_migration(pool.prefix,
+                                             interval=migrate_every)
+
+        for stage in graph.stages:
+            pool = graph.pool_of(stage.pool)
+            task = (stage.body if not graph.instance_tracking
+                    else self._make_task(stage))
+            self.rt.register(stage.pool, task, order_of=stage.order_of,
+                             resource=stage.resource,
+                             pool_nodes=graph.tiers[pool.tier].nodes,
+                             name=stage.name)
+
+    def _make_policy(self, n_shards: int) -> PlacementPolicy:
+        base = POLICIES[self.placement]()
+        if self.read_replicas > 1:
+            return ReplicatedPlacement(
+                base, n_replicas=min(self.read_replicas, n_shards))
+        return base
+
+    # -- stage synthesis ---------------------------------------------------
+
+    def _make_task(self, stage: Stage):
+        def task(ctx, key, value):
+            inst = instance_of(key)
+            rec = self.tracker.arrive(inst, stage.name, key, ctx.now)
+            if stage.join and \
+                    rec.arrivals[stage.name] < stage.expected_arrivals:
+                return                              # barrier not ready
+            t0 = ctx.now
+            seq = self.tracker.fire(inst, stage.name)
+            if stage.body is not None:
+                yield from stage.body(ctx, key, value)
+            else:
+                if stage.join:
+                    # fan-in: fetch every input that arrived before us
+                    for k in rec.inputs[stage.name]:
+                        if k != key:
+                            yield Get(k, required=False)
+                for r in stage.reads:
+                    for k in r.keys(inst):
+                        yield Get(k, required=r.required, wait=r.wait)
+                if stage.cost > 0:
+                    yield Compute(stage.resource, stage.cost)
+                for e in stage.emits:
+                    for i in range(e.fanout):
+                        yield Put(workflow_key(e.pool, inst,
+                                               f"{stage.name}{seq}", i),
+                                  ("wf", inst, stage.name, seq, i),
+                                  size=e.size)
+            self.tracker.stage_done(inst, stage.name, t0, ctx.now)
+            if rec.t_complete is not None and rec.t_complete == ctx.now:
+                self._on_complete(inst)
+        return task
+
+    def _on_complete(self, instance: str) -> None:
+        if self.gang_pin and self.unpin_on_complete:
+            label = instance_label(instance)
+            for prefix in self._instance_pools:
+                self.store.pools[prefix].engine.unpin(label)
+
+    # -- driving -----------------------------------------------------------
+
+    def preload(self, key: str, value: Any = None, size: int = 0,
+                at: float = 0.0) -> None:
+        """Store a shared object (e.g. an index slab) without triggering."""
+        self.rt.client_put(at, key, value, size=size, fire_udls=False)
+
+    def submit(self, instance: str, at: float, value: Any = None,
+               size: int = 0, deadline: Optional[float] = None) -> None:
+        """Admit one workflow instance at virtual time ``at``.
+
+        Under ``gang_pin`` the admission event (scheduled just before the
+        triggering put) picks one shard slot through the anchor pool's
+        policy and pins the instance's label there in every
+        instance-grouped pool — workflow-atomic placement.
+        """
+        assert self.graph.instance_tracking, \
+            "submit() needs an instance-tracked graph"
+        assert "_" not in instance and "/" not in instance, instance
+        if self.gang_pin:
+            self.rt.sim.at(at, lambda: self._admit_pins(instance))
+        self.tracker.admit(instance, at, deadline=deadline)
+        key = workflow_key(self.graph.source_pool, instance, "event", 0)
+        self.rt.client_put(at, key, value, size=size)
+
+    def _admit_pins(self, instance: str) -> None:
+        label = instance_label(instance)
+        anchor = self.store.pools[self.anchor_pool].engine
+        slot = anchor.shards.index(anchor.home_of(label))
+        for prefix in self._instance_pools:
+            eng = self.store.pools[prefix].engine
+            eng.pin(label, eng.shards[slot])
+
+    def pinned_slot(self, instance: str) -> Optional[int]:
+        """Shard slot an instance is gang-pinned to (None if unpinned)."""
+        label = instance_label(instance)
+        anchor = self.store.pools[self.anchor_pool].engine
+        shard = anchor.pins.get(label)
+        return None if shard is None else anchor.shards.index(shard)
+
+    def run(self, until: float = float("inf")) -> None:
+        self.rt.run(until)
+
+    def summary(self) -> Dict[str, Any]:
+        out = self.tracker.summary()
+        out.update(
+            remote_gets=self.store.stats.remote_gets,
+            local_gets=self.store.stats.local_gets,
+            bytes_remote=self.store.stats.bytes_remote,
+            bytes_replica_sync=self.store.stats.bytes_replica_sync,
+            migrations=self.store.stats.migrations,
+            bytes_migrated=self.store.stats.bytes_migrated,
+        )
+        return out

@@ -1,6 +1,7 @@
 """Documentation is executable: every fenced python snippet in
-docs/affinity_api.md runs, and every fully-qualified `repro.*` name
-mentioned in the docs resolves to a real symbol."""
+docs/affinity_api.md and docs/workflows.md runs, and every
+fully-qualified `repro.*` name mentioned in the docs resolves to a real
+symbol."""
 import importlib
 import re
 from pathlib import Path
@@ -12,6 +13,7 @@ README = Path(__file__).resolve().parents[1] / "README.md"
 
 API_DOC = DOCS / "affinity_api.md"
 ARCH_DOC = DOCS / "architecture.md"
+WORKFLOWS_DOC = DOCS / "workflows.md"
 
 
 def fenced_python_blocks(text: str):
@@ -44,9 +46,10 @@ def test_docs_exist():
     assert README.exists()
     assert API_DOC.exists()
     assert ARCH_DOC.exists()
+    assert WORKFLOWS_DOC.exists()
 
 
-@pytest.mark.parametrize("doc", [API_DOC, ARCH_DOC])
+@pytest.mark.parametrize("doc", [API_DOC, ARCH_DOC, WORKFLOWS_DOC])
 def test_all_qualified_names_resolve(doc):
     names = qualified_names(doc.read_text())
     assert names, f"{doc.name} should document qualified repro.* symbols"
@@ -59,13 +62,14 @@ def test_all_qualified_names_resolve(doc):
     assert not missing, f"doc names that don't resolve: {missing}"
 
 
-@pytest.mark.parametrize("idx_snippet",
-                         list(enumerate(
-                             fenced_python_blocks(API_DOC.read_text()))),
-                         ids=lambda p: f"snippet{p[0]}")
-def test_api_doc_snippets_run(idx_snippet):
-    _, snippet = idx_snippet
-    exec(compile(snippet, str(API_DOC), "exec"), {"__name__": "__docs__"})
+@pytest.mark.parametrize(
+    "doc_idx_snippet",
+    [(doc, i, snip) for doc in (API_DOC, WORKFLOWS_DOC)
+     for i, snip in enumerate(fenced_python_blocks(doc.read_text()))],
+    ids=lambda p: f"{p[0].stem}-snippet{p[1]}")
+def test_doc_snippets_run(doc_idx_snippet):
+    doc, _, snippet = doc_idx_snippet
+    exec(compile(snippet, str(doc), "exec"), {"__name__": "__docs__"})
 
 
 def test_readme_names_tier1_command():

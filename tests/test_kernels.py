@@ -1,9 +1,16 @@
 """Per-kernel correctness: Pallas (interpret=True) vs ref.py oracles,
-swept over shapes and dtypes."""
+swept over shapes and dtypes.
+
+Interpret-mode Pallas sweeps take minutes — the whole module is marked
+``slow`` so the fast tier-1 CI job (``-m "not slow"``) skips it; the
+dedicated slow job runs it.
+"""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention

@@ -1,9 +1,16 @@
 """Model zoo: per-arch smoke (reduced config, fwd/train/decode on CPU) +
-prefill/decode consistency."""
+prefill/decode consistency.
+
+Compiling every architecture takes minutes — the whole module is marked
+``slow`` so the fast tier-1 CI job (``-m "not slow"``) skips it; the
+dedicated slow job runs it.
+"""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro import configs
 from repro.models import build_model, count_params

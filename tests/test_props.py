@@ -13,9 +13,11 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Descriptor, HashPlacement, RegexAffinity,
-                        RendezvousPlacement, GroupSequencer, stable_hash)
+                        RendezvousPlacement, GroupSequencer, stable_hash,
+                        instance_label, instance_of)
 from repro.training import compression
 from repro.training.data import DataConfig, TokenPipeline
+from repro.workflows import Emit, WorkflowGraph, WorkflowRuntime
 
 import jax.numpy as jnp
 
@@ -60,6 +62,61 @@ def test_stable_hash_deterministic(x):
     s = f"key_{x}"
     assert stable_hash(s) == stable_hash(s)
     assert 0 <= stable_hash(s) < 2 ** 64
+
+
+# -- workflow affinity propagation (random graph shapes) ---------------------
+
+CHAINS = st.lists(
+    st.tuples(st.integers(min_value=1, max_value=3),    # edge fanout
+              st.booleans()),                           # join barrier?
+    min_size=1, max_size=4)
+
+
+def _chain_workflow(chain, n_shards):
+    """A linear workflow with random per-edge fan-out and join barriers."""
+    g = WorkflowGraph("prop")
+    g.add_tier("t", n_shards, {"gpu": 1, "cpu": 2, "nic": 2})
+    for i in range(len(chain) + 1):
+        g.add_pool(f"/p{i}", tier="t", shards=n_shards)
+    for i, (fanout, join) in enumerate(chain):
+        g.add_stage(f"s{i}", pool=f"/p{i}", resource="gpu", cost=0.0,
+                    emits=[Emit(f"/p{i + 1}", fanout=fanout, size=64)],
+                    join=join and i > 0, sink=(i == len(chain) - 1))
+    return g.validate()
+
+
+@given(CHAINS, st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=4), st.booleans())
+@settings(max_examples=30, deadline=None)
+def test_workflow_instance_forms_one_affinity_group(chain, n_shards,
+                                                    n_instances, gang):
+    """Every object every stage of an instance writes — across random
+    graph shapes, shard counts, and gang pinning — carries the same
+    affinity label, and (gang-pinned) lives on the pinned shard slot."""
+    g = _chain_workflow(chain, n_shards)
+    wrt = WorkflowRuntime(g, gang_pin=gang,
+                          placement="load_aware" if gang else "hash")
+    for i in range(n_instances):
+        wrt.submit(f"i{i}", at=0.001 + i * 0.001)
+    wrt.run()
+    assert wrt.summary()["n"] == n_instances
+    for i in range(n_instances):
+        inst, label = f"i{i}", instance_label(f"i{i}")
+        slot = wrt.pinned_slot(inst) if gang else None
+        n_objects = 0
+        for pool in wrt.store.pools.values():
+            shard_names = list(pool.shards)
+            for si, shard in enumerate(pool.shards.values()):
+                for key, rec in shard.objects.items():
+                    if instance_of(key) != inst:
+                        continue
+                    n_objects += 1
+                    assert rec.affinity == label, key
+                    home = pool.engine.home_of(label)
+                    assert shard_names.index(home) == si, key
+                    if gang:
+                        assert si == slot % len(shard_names), key
+        assert n_objects >= len(chain)      # every stage's event landed
 
 
 @given(st.lists(st.tuples(st.sampled_from("abc"), st.integers(0, 100)),

@@ -1,0 +1,203 @@
+"""Workflow-graph subsystem: validation, fan-in/fan-out accounting,
+affinity propagation, gang pinning, SLO tracking, and the fig7 claim
+(workflow-atomic placement beats key-hash scatter at the tail)."""
+import pytest
+
+from repro.core import instance_label, instance_of, workflow_key
+from repro.pipelines.rcp.app import Layout, RCPApp
+from repro.pipelines.rcp.data import make_scene
+from repro.workflows import (Emit, WorkflowGraph, WorkflowGraphError,
+                             WorkflowRuntime, mode_kwargs, preload_index,
+                             rag_workflow, speech_workflow)
+
+RES = {"gpu": 1, "cpu": 2, "nic": 2}
+
+
+# -- key helpers --------------------------------------------------------------
+
+def test_workflow_key_roundtrip():
+    k = workflow_key("/cands", "req7", "retrieve0", 3)
+    assert k == "/cands/req7_retrieve0_3"
+    assert instance_of(k) == "req7"
+    assert instance_label("req7") == "/req7_"
+
+
+def test_workflow_key_rejects_reserved_chars():
+    with pytest.raises(AssertionError):
+        workflow_key("/p", "a_b", "s", 0)
+
+
+# -- graph validation ---------------------------------------------------------
+
+def test_graph_rejects_unknown_pool():
+    g = WorkflowGraph("bad")
+    g.add_tier("t", 2, RES)
+    g.add_pool("/a", tier="t", shards=2)
+    g.add_stage("s", pool="/missing")
+    with pytest.raises(WorkflowGraphError, match="unknown trigger pool"):
+        g.validate()
+
+
+def test_graph_rejects_cycle():
+    g = WorkflowGraph("loop")
+    g.add_tier("t", 2, RES)
+    g.add_pool("/a", tier="t", shards=2)
+    g.add_pool("/b", tier="t", shards=2)
+    g.add_stage("s1", pool="/a", emits=[Emit("/b")])
+    g.add_stage("s2", pool="/b", emits=[Emit("/a")])
+    with pytest.raises(WorkflowGraphError, match="cycle"):
+        g.validate()
+
+
+def test_graph_rejects_undersized_tier():
+    g = WorkflowGraph("tiny")
+    g.add_tier("t", 2, RES)
+    with pytest.raises(WorkflowGraphError, match="nodes"):
+        g.add_pool("/a", tier="t", shards=2, replication=2)
+
+
+def test_fan_in_accounting():
+    rag = rag_workflow(shards=2, n_docs=5)
+    by = {s.name: s for s in rag.stages}
+    assert by["retrieve"].expected_arrivals == 1
+    assert by["rerank"].expected_arrivals == 5      # join over the fan-out
+    assert by["rerank"].firings == 1
+    assert by["generate"].expected_arrivals == 1
+    assert rag.source_pool == "/queries"
+    assert [s.name for s in rag.sink_stages] == ["generate"]
+
+    sp = speech_workflow(shards=2)
+    by = {s.name: s for s in sp.stages}
+    assert by["intent"].expected_arrivals == 1
+    assert by["diarize"].expected_arrivals == 1
+    assert by["action"].expected_arrivals == 2      # joins both branches
+    assert by["action"].firings == 1
+
+
+# -- end-to-end ---------------------------------------------------------------
+
+def run_shape(make, mode, n=24, shards=3, **kw):
+    g = make(shards=shards)
+    wrt = WorkflowRuntime(g, **mode_kwargs(mode), **kw)
+    if make is rag_workflow:
+        preload_index(wrt)
+    for i in range(n):
+        wrt.submit(f"req{i}", at=0.05 + i * 0.02, deadline=0.5)
+    wrt.run()
+    return wrt
+
+
+@pytest.mark.parametrize("make", [rag_workflow, speech_workflow],
+                         ids=["rag", "speech"])
+def test_all_instances_complete(make):
+    wrt = run_shape(make, "atomic")
+    s = wrt.summary()
+    assert s["n"] == s["n_submitted"] == 24
+    assert s["median"] > 0
+    assert set(s["stages"]) == {st.name for st in wrt.graph.stages}
+
+
+def test_join_barrier_fires_once_per_instance():
+    wrt = run_shape(speech_workflow, "affinity", n=10)
+    per_inst = [r for r in wrt.tracker.records.values()]
+    for rec in per_inst:
+        assert rec.arrivals["action"] == 2
+        assert rec.fired["action"] == 1
+        assert rec.done["action"] == 1
+
+
+def test_affinity_propagation_all_stages_one_group():
+    """Every object a workflow instance touches shares one affinity label."""
+    wrt = run_shape(rag_workflow, "affinity", n=12)
+    seen = 0
+    for pool in wrt.store.pools.values():
+        for shard in pool.shards.values():
+            for key, rec in shard.objects.items():
+                inst = instance_of(key)
+                if inst and inst.startswith("req"):
+                    assert rec.affinity == instance_label(inst), key
+                    seen += 1
+    assert seen > 12 * 3      # several objects per instance landed
+
+
+def test_gang_pin_places_whole_instance_on_one_slot():
+    wrt = run_shape(rag_workflow, "atomic", n=12)
+    for i in range(12):
+        slot = wrt.pinned_slot(f"req{i}")
+        assert slot is not None
+        label = instance_label(f"req{i}")
+        for prefix in wrt._instance_pools:
+            pool = wrt.store.pools[prefix]
+            home = pool.engine.home_of(label)
+            assert list(pool.shards).index(home) == slot, (prefix, i)
+
+
+def test_unpin_on_complete_releases_pins():
+    g = speech_workflow(shards=2)
+    wrt = WorkflowRuntime(g, gang_pin=True, placement="load_aware",
+                          unpin_on_complete=True)
+    for i in range(6):
+        wrt.submit(f"req{i}", at=0.01 + i * 0.05)
+    wrt.run()
+    assert wrt.summary()["n"] == 6
+    for prefix in wrt._instance_pools:
+        assert not wrt.store.pools[prefix].engine.pins
+
+
+def test_deadline_slo_tracking():
+    g = speech_workflow(shards=2)
+    wrt = WorkflowRuntime(g, gang_pin=True, placement="load_aware")
+    wrt.submit("fast", at=0.0, deadline=10.0)
+    wrt.submit("tight", at=0.0, deadline=1e-6)
+    wrt.run()
+    s = wrt.summary()
+    assert s["slo_misses"] == 1
+    assert s["slo_miss_rate"] == 0.5
+    assert wrt.tracker.records["tight"].missed_deadline
+    assert not wrt.tracker.records["fast"].missed_deadline
+
+
+def test_shared_index_is_one_hot_group():
+    wrt = run_shape(rag_workflow, "affinity", n=8)
+    homes = {wrt.store.shard_of(k).name
+             for k in wrt.store.group_members("/index", "/corpus_")}
+    assert len(homes) == 1      # all slabs collocate: one (hot) group
+
+
+def test_atomic_beats_keyhash_p99():
+    """The fig7 claim at test scale: gang placement <= key-hash scatter."""
+    atomic = run_shape(rag_workflow, "atomic", n=30, shards=4).summary()
+    scatter = run_shape(rag_workflow, "keyhash", n=30, shards=4).summary()
+    assert atomic["p99"] <= scatter["p99"]
+    assert atomic["remote_gets"] < scatter["remote_gets"]
+
+
+def test_submit_requires_tracked_graph():
+    app = RCPApp([make_scene("little3", 40)], Layout(1, 1, 1))
+    with pytest.raises(AssertionError):
+        app.wrt.submit("x", at=0.0)
+
+
+# -- the RCP port -------------------------------------------------------------
+
+def test_rcp_graph_shape():
+    app = RCPApp([make_scene("little3", 40)], Layout(2, 3, 3))
+    g = app.graph
+    assert [s.name for s in g.stages] == ["MOT", "PRED", "CD"]
+    assert g.source_pool == "/frames"
+    assert [s.name for s in g.sink_stages] == ["CD"]
+    assert [p.prefix for p in g.pools] == \
+        ["/frames", "/states", "/positions", "/predictions", "/cd"]
+    assert [p.prefix for p in g.pools if p.migratable] == \
+        ["/positions", "/predictions"]
+    assert app.mot_nodes == ["mot0", "mot1"]
+    assert len(app.pred_nodes) == 3
+
+
+def test_rcp_still_runs_on_workflow_runtime():
+    app = RCPApp([make_scene("little3", 40)], Layout(2, 2, 2), grouped=True)
+    app.stream()
+    app.run()
+    s = app.summary(warmup=10)
+    assert s["n"] > 0
+    assert s["remote_gets"] == 0      # collocation preserved by the port
