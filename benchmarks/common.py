@@ -44,3 +44,28 @@ def emit(rows):
     for name, us, derived in rows:
         d = ";".join(f"{k}={v}" for k, v in derived.items())
         print(f"{name},{us:.1f},{d}")
+
+
+def write_bench_json(suite: str, rows, wall_s: float) -> Path:
+    """Write ``BENCH_<suite>.json`` — the machine-readable benchmark record.
+
+    One file per suite under ``benchmarks/artifacts/`` (uploaded as a CI
+    artifact) so the perf trajectory — p50/p99/SLO-hit/wall-clock per
+    config — is diffable across PRs instead of living in CI logs.
+
+    ``BENCH_fig7.json`` / ``BENCH_fig8.json`` are golden-file style: the
+    committed copies are the current PR's reference numbers and each perf
+    PR refreshes them (that IS the trajectory record); a local run
+    rewriting them is expected — commit the refresh or discard it, like
+    any golden file.  Every other suite's record is gitignored.
+    """
+    import json
+    payload = {
+        "suite": suite,
+        "wall_s": round(wall_s, 3),
+        "rows": [{"name": name, "us_per_call": round(us, 1), **derived}
+                 for name, us, derived in rows],
+    }
+    path = ARTIFACTS / f"BENCH_{suite}.json"
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True))
+    return path

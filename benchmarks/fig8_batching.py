@@ -1,0 +1,120 @@
+"""Fig. 8 (ours): cross-instance stage batching under load, at 64 slots.
+
+Sweep axes: batch window x arrival rate x workflow shape x placement.
+
+  * ``keyhash``          — ungrouped key-hash scatter (cloud baseline),
+    run at the two highest rates (the "high load" comparison point);
+  * ``atomic``           — workflow-atomic gang placement, one event per
+    stage firing (the fig7 headline, unbatched);
+  * ``atomic+batch/Wms`` — atomic plus the StageBatcher with a W ms
+    formation window; same-stage firings pinned to the same shard slot
+    coalesce into one amortized ``BatchCompute``.
+
+Offered load is ``rate_x`` times a fixed per-slot base rate, so ``rate_x``
+is a direct utilization dial over ``RATE_MULTS = (2, 8, 16)``: 2x runs
+the bottleneck resource near saturation, 8x is sustained overload, and
+16x is a burst well past it.  The paper-level claim this
+figure records: affinity gives placement wins at any load (fig7), and the
+*same* affinity signal gives batching wins exactly when load makes them
+matter — batched-atomic p99 <= unbatched-atomic p99 at the two highest
+rates, with zero accounting drift (the property test pins that).
+
+Wall-clock note: this sweep runs at 64 slots — twice fig7's largest quick
+scale — and `run()` records its total wall seconds in the emitted rows so
+`BENCH_fig8.json` tracks the DES hot-path budget across PRs.
+``PREPR_FIG7_32SLOT_WALL_S`` is the measured wall-clock of the pre-PR
+fig7 machinery sweeping 32 slots on the dev machine this PR was tuned on
+(both shapes x 4 modes, 30 instances/slot) — the acceptance reference the
+64-slot sweep must beat.
+"""
+import time
+
+from .common import emit
+
+SLOTS = 64
+PER_SLOT_RATE = 12.0           # instances/s per slot at rate_x=1
+RATE_MULTS = (2, 8, 16)        # near-saturation, overload, burst
+# formation windows scale with each shape's bottleneck stage cost
+# (InferLine's lesson: the right batch knob is per-stage, not global) —
+# roughly 0.5x and 1x the bottleneck service time
+WINDOWS_MS = {"rag": (16, 32), "speech": (8, 16)}
+DEADLINES = {"rag": 0.40, "speech": 0.30}
+PER_SLOT_INSTANCES = 3         # kept small: 64*3=192 instances per config
+
+# pre-PR reference (see module docstring); recorded, not recomputed
+PREPR_FIG7_32SLOT_WALL_S = 4.70
+
+
+def run_config(shape: str, mode: str, rate_x: int, window_ms: float = 0.0,
+               slots: int = SLOTS, n_instances: int = None, seed: int = 0):
+    from repro.workflows import (WORKFLOW_SHAPES, BatchPolicy,
+                                 WorkflowRuntime, mode_kwargs,
+                                 preload_index)
+    graph = WORKFLOW_SHAPES[shape](shards=slots)
+    kw = mode_kwargs(mode)
+    if kw.get("batching"):
+        kw["batch_policy"] = BatchPolicy(window=window_ms * 1e-3)
+    wrt = WorkflowRuntime(graph, seed=seed, **kw)
+    if shape == "rag":
+        preload_index(wrt)
+    rate = PER_SLOT_RATE * rate_x * slots
+    n = n_instances if n_instances is not None else \
+        PER_SLOT_INSTANCES * slots
+    for i in range(n):
+        wrt.submit(f"req{i}", at=0.05 + i / rate,
+                   deadline=DEADLINES[shape])
+    wrt.run()
+    return wrt.summary()
+
+
+def _configs():
+    """(shape, mode, rate_x, window_ms, tag) for the full sweep.
+
+    At the lowest rate one batched window suffices — idle flushing makes
+    every window behave identically there (the "batching is free when
+    unloaded" datapoint); the full window axis runs at the two highest
+    rates, where formation actually happens.
+    """
+    out = []
+    for shape in ("rag", "speech"):
+        windows = WINDOWS_MS[shape]
+        for rate_x in RATE_MULTS:
+            high = rate_x >= RATE_MULTS[-2]
+            out.append((shape, "atomic", rate_x, 0.0, "atomic"))
+            for w in (windows if high else windows[:1]):
+                out.append((shape, "atomic+batch", rate_x, float(w),
+                            f"batch{w}ms"))
+            if high:                          # high-load baseline points
+                out.append((shape, "keyhash", rate_x, 0.0, "keyhash"))
+    return out
+
+
+def run(quick=True):
+    per_slot = PER_SLOT_INSTANCES if quick else 4 * PER_SLOT_INSTANCES
+    rows = []
+    t_sweep = time.perf_counter()
+    for shape, mode, rate_x, window_ms, tag in _configs():
+        t0 = time.perf_counter()
+        s = run_config(shape, mode, rate_x, window_ms,
+                       n_instances=per_slot * SLOTS)
+        wall = time.perf_counter() - t0
+        name = f"fig8/{shape}/{SLOTS}sl/{rate_x}x/{tag}"
+        derived = {"p50_ms": round(s["median"] * 1e3, 2),
+                   "p99_ms": round(s["p99"] * 1e3, 2),
+                   "slo_miss": round(s.get("slo_miss_rate", 0.0), 3),
+                   "wall_s": round(wall, 3),
+                   "n": s["n"]}
+        if "mean_batch" in s:
+            derived["mean_batch"] = round(s["mean_batch"], 2)
+            derived["batches"] = s["batches"]
+        rows.append((name, s["median"] * 1e6, derived))
+    total = round(time.perf_counter() - t_sweep, 2)
+    rows.append((f"fig8/sweep_wall/{SLOTS}sl", total * 1e6,
+                 {"wall_s": total,
+                  "ref_prepr_fig7_32slot_wall_s": PREPR_FIG7_32SLOT_WALL_S,
+                  "beats_ref": total < PREPR_FIG7_32SLOT_WALL_S}))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,7 +1,11 @@
 """Benchmark runner — one module per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3,...]``
-prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+prints ``name,us_per_call,derived`` CSV rows per the harness contract,
+writes a machine-readable ``benchmarks/artifacts/BENCH_<suite>.json`` per
+suite (p50/p99/SLO-hit/wall-clock per config — the cross-PR perf record,
+uploaded as a CI artifact), and exits non-zero if any suite raised, so a
+broken figure fails CI instead of scrolling past on stderr.
 """
 import argparse
 import sys
@@ -9,8 +13,8 @@ import time
 
 from . import (azure_mode, fig3_single_client, fig4_three_clients,
                fig5_no_caching, fig6_replication, fig7_workflows,
-               micro_affinity, roofline, serving_affinity)
-from .common import emit
+               fig8_batching, micro_affinity, roofline, serving_affinity)
+from .common import emit, write_bench_json
 
 SUITES = {
     "fig3": fig3_single_client,
@@ -18,6 +22,7 @@ SUITES = {
     "fig5": fig5_no_caching,
     "fig6": fig6_replication,
     "fig7": fig7_workflows,
+    "fig8": fig8_batching,
     "azure": azure_mode,
     "micro": micro_affinity,
     "serving": serving_affinity,
@@ -33,6 +38,7 @@ def main() -> None:
                     help="comma-separated suite names")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(SUITES))
+    failures = []
     print("name,us_per_call,derived")
     for name in names:
         mod = SUITES[name]
@@ -41,9 +47,15 @@ def main() -> None:
             rows = mod.run(quick=not args.full)
         except Exception as e:   # noqa: BLE001 — keep the suite going
             print(f"{name}/ERROR,0,{e!r}", file=sys.stderr)
+            failures.append(name)
             continue
+        wall = time.perf_counter() - t0
         emit(rows)
-        print(f"# {name}: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+        path = write_bench_json(name, rows, wall)
+        print(f"# {name}: {wall:.1f}s -> {path.name}", file=sys.stderr)
+    if failures:
+        print(f"# FAILED suites: {','.join(failures)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

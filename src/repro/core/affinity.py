@@ -49,7 +49,17 @@ class Descriptor:
 
 
 class AffinityFunction:
-    """Base class: maps a descriptor to an affinity key (or None)."""
+    """Base class: maps a descriptor to an affinity key (or None).
+
+    ``key_pure`` declares that the label depends ONLY on ``desc.key`` —
+    key-pure functions let the store memoize key -> label on the hot
+    put/get path.  It is opt-in (default False): a subclass must never
+    inherit memoization it did not ask for, because a stale cached label
+    silently misplaces objects rather than erroring.  The built-ins that
+    only read the key (regex / instance / no-affinity) declare it.
+    """
+
+    key_pure = False
 
     def __call__(self, desc: Descriptor) -> Optional[AffinityKey]:
         raise NotImplementedError
@@ -64,6 +74,8 @@ class RegexAffinity(AffinityFunction):
     e.g. pattern ``/[a-zA-Z0-9]+_`` over key ``/positions/little3_7_42``
     applied to the part after the pool prefix yields ``/little3_``.
     """
+
+    key_pure = True
 
     def __init__(self, pattern: str):
         self.pattern = pattern
@@ -80,6 +92,8 @@ class RegexAffinity(AffinityFunction):
 class CallableAffinity(AffinityFunction):
     """Arbitrary developer logic (e.g. keyed on a runtime classification)."""
 
+    key_pure = False          # arbitrary logic may read size/meta
+
     def __init__(self, fn: Callable[[Descriptor], Optional[AffinityKey]],
                  name: str = "callable"):
         self._fn = fn
@@ -94,6 +108,8 @@ class CallableAffinity(AffinityFunction):
 
 class NoAffinity(AffinityFunction):
     """Baseline: no grouping — placement hashes the raw object key."""
+
+    key_pure = True
 
     def __call__(self, desc: Descriptor) -> Optional[AffinityKey]:
         return None
@@ -141,6 +157,8 @@ class InstanceAffinity(AffinityFunction):
     plumbing and the gang-pinning path can derive the label it must pin.
     """
 
+    key_pure = True
+
     def __call__(self, desc: Descriptor) -> Optional[AffinityKey]:
         inst = instance_of(desc.key)
         return instance_label(inst) if inst else None
@@ -163,6 +181,7 @@ class AffinityStats:
 class InstrumentedAffinity(AffinityFunction):
     def __init__(self, inner: AffinityFunction):
         self.inner = inner
+        self.key_pure = inner.key_pure
         self.stats = AffinityStats()
 
     def __call__(self, desc: Descriptor) -> Optional[AffinityKey]:

@@ -102,25 +102,46 @@ class ObjectPool:
             [s.name for s in shards],
             affinity_fn=self.affinity_fn,
             policy=policy or HashPlacement())
+        # key -> label memo: valid whenever the affinity function is
+        # key-pure (labels depend only on the key, never size/meta), which
+        # holds for regex / instance / no-affinity pools.  Labels never
+        # change for a given key, so no invalidation is needed.  NOTE:
+        # hits bypass the InstrumentedAffinity wrapper, so the pool's
+        # AffinityStats counts cache MISSES only (distinct keys) — the
+        # per-call overhead microbenchmarks call the function directly.
+        self._label_memo: Optional[Dict[str, str]] = (
+            {} if (self.affinity_fn is None or self.affinity_fn.key_pure)
+            else None)
 
     def descriptor(self, key: str, size: int = 0, **meta) -> Descriptor:
         # the affinity regex is matched against the key *inside* the pool
         rel = key[len(self.prefix):]
         return Descriptor.of(rel, size=size, full_key=key, **meta)
 
+    def label_of(self, key: str, size: int = 0, **meta) -> str:
+        """The placement label of ``key`` (memoized for key-pure pools)."""
+        memo = self._label_memo
+        if memo is not None:
+            label = memo.get(key)
+            if label is None:
+                label = affinity_key_for(self.affinity_fn,
+                                         self.descriptor(key))
+                memo[key] = label
+            return label
+        return affinity_key_for(self.affinity_fn,
+                                self.descriptor(key, size, **meta))
+
     def home(self, key: str, size: int = 0, **meta) -> Shard:
-        d = self.descriptor(key, size, **meta)
-        return self.shards[self.engine.place(d).shard]
+        label = self.label_of(key, size, **meta)
+        return self.shards[self.engine.home_of(label)]
 
     def replica_homes(self, key: str, size: int = 0, **meta) -> List[Shard]:
         """All shards holding the key's group, primary first."""
-        d = self.descriptor(key, size, **meta)
-        label = affinity_key_for(self.affinity_fn, d)
+        label = self.label_of(key, size, **meta)
         return [self.shards[s] for s in self.engine.replica_homes(label)]
 
     def affinity_of(self, key: str) -> str:
-        d = self.descriptor(key)
-        return affinity_key_for(self.affinity_fn, d)
+        return self.label_of(key)
 
 
 @dataclasses.dataclass
@@ -144,6 +165,11 @@ class CascadeStore:
         self.stats = StoreStats()
         self.group_counters: Dict[Tuple[str, str], GroupCounters] = {}
         self._version = 0
+        # directory -> pool memo for the hot put/get/trigger path; keys in
+        # one directory always resolve to the same pool unless pool
+        # prefixes nest, in which case the memo is disabled (see pool_for)
+        self._pool_memo: Dict[str, ObjectPool] = {}
+        self._nested_prefixes = False
 
     # -- pool management (paper Listing 1) -----------------------------------
 
@@ -166,9 +192,22 @@ class CascadeStore:
               else affinity_fn)
         pool = ObjectPool(prefix, shards, fn, policy)
         self.pools[prefix] = pool
+        self._pool_memo.clear()
+        self._nested_prefixes = any(
+            a != b and b.startswith(a + "/")
+            for a in self.pools for b in self.pools)
         return pool
 
     def pool_for(self, key: str) -> ObjectPool:
+        # fast path: all keys under one directory share a pool (checked:
+        # a hit is verified, and nesting pool prefixes disables the memo,
+        # so the longest-prefix-wins rule below stays authoritative)
+        memo_key = key.rpartition("/")[0] or key
+        if not self._nested_prefixes:
+            pool = self._pool_memo.get(memo_key)
+            if pool is not None and (
+                    key.startswith(pool.prefix + "/") or key == pool.prefix):
+                return pool
         best = None
         for prefix, pool in self.pools.items():
             if key.startswith(prefix + "/") or key == prefix:
@@ -176,6 +215,8 @@ class CascadeStore:
                     best = pool
         if best is None:
             raise KeyError(f"no object pool matches key {key!r}")
+        if not self._nested_prefixes:
+            self._pool_memo[memo_key] = best
         return best
 
     # -- UDLs ------------------------------------------------------------------

@@ -172,10 +172,27 @@ class PlacementEngine:
     def __init__(self, shards: Sequence[str],
                  affinity_fn: Optional[AffinityFunction] = None,
                  policy: Optional[PlacementPolicy] = None):
-        self.shards: List[str] = list(shards)
+        self._shards: List[str] = list(shards)
         self.affinity_fn = affinity_fn
         self.policy = policy or HashPlacement()
         self.pins: Dict[str, str] = {}    # label -> shard (migration)
+        # label -> home memo: placement is sticky per label for every
+        # policy here (hash/rendezvous are pure, load-aware binds once),
+        # so lookups after the first are dict hits instead of blake2b
+        # hashes.  Invalidated per label on pin/unpin and wholesale when
+        # the shard set changes (autoscaler resharding assigns .shards).
+        self._home_cache: Dict[str, str] = {}
+        self._replica_cache: Dict[str, List[str]] = {}
+
+    @property
+    def shards(self) -> List[str]:
+        return self._shards
+
+    @shards.setter
+    def shards(self, value: Sequence[str]) -> None:
+        self._shards = list(value)
+        self._home_cache.clear()
+        self._replica_cache.clear()
 
     def place(self, desc: Descriptor) -> PlacementDecision:
         label = affinity_key_for(self.affinity_fn, desc)
@@ -184,22 +201,33 @@ class PlacementEngine:
                                  grouped=(label != desc.key))
 
     def home_of(self, label: str) -> str:
+        shard = self._home_cache.get(label)
+        if shard is not None:
+            return shard
         pinned = self.pins.get(label)
-        if pinned is not None and pinned in self.shards:
-            return pinned
-        return self.policy.place(label, self.shards)
+        if pinned is not None and pinned in self._shards:
+            shard = pinned
+        else:
+            shard = self.policy.place(label, self._shards)
+        self._home_cache[label] = shard
+        return shard
 
     def replica_homes(self, label: str) -> List[str]:
         """All shards holding the group (primary first). Length 1 unless
         the policy is replicated."""
+        homes = self._replica_cache.get(label)
+        if homes is not None:
+            return homes
         rep = getattr(self.policy, "replica_shards", None)
         if rep is None:
-            return [self.home_of(label)]
-        homes = rep(label, self.shards)
-        pinned = self.pins.get(label)
-        if pinned is not None and pinned in self.shards:
-            k = max(len(homes), 1)
-            homes = ([pinned] + [s for s in homes if s != pinned])[:k]
+            homes = [self.home_of(label)]
+        else:
+            homes = rep(label, self._shards)
+            pinned = self.pins.get(label)
+            if pinned is not None and pinned in self._shards:
+                k = max(len(homes), 1)
+                homes = ([pinned] + [s for s in homes if s != pinned])[:k]
+        self._replica_cache[label] = homes
         return homes
 
     # -- load + migration hooks --------------------------------------------
@@ -211,23 +239,31 @@ class PlacementEngine:
 
     def pin(self, label: str, shard: str, nbytes: int = 0) -> None:
         """Override a group's home (installed by GroupMigrator)."""
-        assert shard in self.shards, (shard, self.shards)
+        assert shard in self._shards, (shard, self._shards)
         self.pins[label] = shard
+        self._home_cache.pop(label, None)
+        self._replica_cache.pop(label, None)
         rb = getattr(self.policy, "rebind", None)
         if rb is not None:
             rb(label, shard, nbytes)
 
     def unpin(self, label: str) -> None:
         self.pins.pop(label, None)
+        self._home_cache.pop(label, None)
+        self._replica_cache.pop(label, None)
 
     # -- elasticity ---------------------------------------------------------
 
     def add_shard(self, shard: str) -> None:
-        if shard not in self.shards:
-            self.shards.append(shard)
+        if shard not in self._shards:
+            self._shards.append(shard)
+            self._home_cache.clear()
+            self._replica_cache.clear()
 
     def remove_shard(self, shard: str) -> None:
-        self.shards.remove(shard)
+        self._shards.remove(shard)
+        self._home_cache.clear()
+        self._replica_cache.clear()
 
     def moved_labels(self, labels: Sequence[str],
                      new_shards: Sequence[str]) -> Dict[str, str]:

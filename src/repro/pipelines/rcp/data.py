@@ -30,8 +30,12 @@ class Scene:
     seed: int = 0
 
     def __post_init__(self):
+        # stable_hash, not hash(): python's randomized string hashing made
+        # scene content (and every figure derived from it) vary per
+        # interpreter launch unless PYTHONHASHSEED was pinned
+        from repro.core.placement import stable_hash
         rng = np.random.default_rng(
-            abs(hash((self.name, self.seed))) % (2 ** 31))
+            stable_hash(f"{self.name}::{self.seed}") % (2 ** 31))
         A, F = self.max_actors, self.n_frames
         # actor lifetimes
         enter = rng.integers(0, max(F - 20, 1), A)

@@ -1,5 +1,7 @@
-from .simulation import (AZURE_NET, CLUSTER_NET, Compute, Get, NetProfile,
-                         Node, Put, Simulator, Sleep, Trigger)
+from .simulation import (AZURE_NET, CLUSTER_NET, BatchCompute, Compute, Get,
+                         NetProfile, Node, Put, SimFuture, Simulator, Sleep,
+                         Trigger, WaitFor)
+from .batching import BatchCostModel
 from .scheduler import (LeastLoadedScheduler, RandomScheduler,
                         ReplicaScheduler, Scheduler, ShardLocalScheduler)
 from .executor import Runtime, TaskContext
@@ -7,8 +9,10 @@ from .faults import FaultInjector, set_straggler
 from .autoscale import AutoScaler, ScaleDecision
 
 __all__ = [
-    "AZURE_NET", "CLUSTER_NET", "Compute", "Get", "NetProfile", "Node",
-    "Put", "Simulator", "Sleep", "Trigger",
+    "AZURE_NET", "CLUSTER_NET", "BatchCompute", "Compute", "Get",
+    "NetProfile", "Node", "Put", "SimFuture", "Simulator", "Sleep",
+    "Trigger", "WaitFor",
+    "BatchCostModel",
     "LeastLoadedScheduler", "RandomScheduler", "ReplicaScheduler",
     "Scheduler", "ShardLocalScheduler",
     "Runtime", "TaskContext",

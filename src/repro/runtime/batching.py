@@ -1,0 +1,73 @@
+"""The batching cost model shared by the serving engine and StageBatcher.
+
+Both batched-decode serving (Vortex, 2511.02062) and per-stage pipeline
+batching (InferLine, 1812.01776) rest on the same hardware fact: one
+batched invocation of a model costs far less than ``n`` sequential
+invocations, because weights stream through the compute units once.  We
+model that with the standard affine service curve
+
+    batch_seconds(unit, n) = unit * (fixed + marginal * n) / (fixed + marginal)
+
+normalized so a batch of one costs exactly ``unit`` — batching is
+transparent at n=1 and sub-linear beyond it.  ``fixed`` is the
+weight-streaming / kernel-launch share of a unit invocation, ``marginal``
+the per-item (activation) share; the serving engine's measured decode
+behavior (one ``decode_step`` advances every active slot) corresponds to a
+high fixed share, which is the default.
+
+One instance of this class is the single source of batching economics:
+``repro.serving.engine.ServingEngine`` uses it for virtual decode time
+(replacing its former private always-fully-amortized decode accounting)
+and ``repro.workflows.batching.StageBatcher`` uses it to cost coalesced
+stage executions.  Sweeps that change the curve therefore move both
+layers coherently.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchCostModel:
+    """Affine amortized batch cost, normalized to ``unit`` at n=1.
+
+    ``fixed``    — weight-streaming/launch share of a unit invocation;
+    ``marginal`` — per-item share;
+    ``max_batch`` — the largest batch the hardware shape admits; cost
+    grows linearly (no further amortization) past it.
+    """
+    fixed: float = 0.65
+    marginal: float = 0.35
+    max_batch: int = 16
+
+    def __post_init__(self):
+        assert self.fixed >= 0 and self.marginal > 0, (self.fixed,
+                                                       self.marginal)
+        assert self.max_batch >= 1, self.max_batch
+
+    def batch_seconds(self, unit_seconds: float, n: int) -> float:
+        """Total service time of a batch of ``n`` unit tasks."""
+        if n <= 1:
+            return unit_seconds
+        norm = self.fixed + self.marginal
+        full, rem = divmod(n, self.max_batch)
+        t = full * unit_seconds * \
+            (self.fixed + self.marginal * self.max_batch) / norm
+        if rem:
+            t += unit_seconds * (self.fixed + self.marginal * rem) / norm
+        return t
+
+    def step_seconds(self, unit_seconds: float, n: int) -> float:
+        """Per-participant amortized time of one batched step."""
+        n = max(n, 1)
+        return self.batch_seconds(unit_seconds, n) / n
+
+    def speedup(self, n: int) -> float:
+        """Throughput gain of a batch of ``n`` over ``n`` sequential runs."""
+        if n <= 1:
+            return 1.0
+        return n / self.batch_seconds(1.0, n)
+
+
+# the engine-calibrated default: decode batching on a serving row
+DEFAULT_COST_MODEL = BatchCostModel()

@@ -25,6 +25,7 @@ class TaskContext:
     runtime: "Runtime"
     node: str
     key: str
+    shard: Optional[str] = None       # home-shard name the task dispatched on
 
     @property
     def now(self) -> float:
@@ -99,7 +100,7 @@ class Runtime:
                 key: str, value: Any) -> None:
         node = self.scheduler.pick(shard, key, self.nodes,
                                    binding.pool_nodes)
-        ctx = TaskContext(runtime=self, node=node, key=key)
+        ctx = TaskContext(runtime=self, node=node, key=key, shard=shard.name)
         gen = binding.make_task(ctx, key, value)
         t0 = self.sim.now
 

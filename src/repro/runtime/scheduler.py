@@ -20,8 +20,28 @@ class Scheduler:
              pool_nodes: Sequence[str]) -> str:
         raise NotImplementedError
 
+    def pick_batch(self, shard: Shard, keys: Sequence[str],
+                   nodes: Dict[str, Node], pool_nodes: Sequence[str],
+                   resource: str = "gpu") -> str:
+        """Node for a *coalesced* batch of same-stage tasks.
+
+        The batch runs as one resource occupancy, so the right node is the
+        one whose `resource` lane frees up first — not a round-robin slot.
+        The default delegates to ``pick`` for schedulers without a better
+        signal (baselines keep their dispatch behavior under batching).
+        """
+        return self.pick(shard, keys[0], nodes, pool_nodes)
+
     def name(self) -> str:
         return type(self).__name__
+
+
+def _least_loaded_on(candidates: Sequence[str], nodes: Dict[str, Node],
+                     resource: str) -> str:
+    def load(n: str) -> int:
+        node = nodes[n]
+        return len(node.queues[resource]) + node.in_use[resource]
+    return min(candidates, key=load)
 
 
 class ShardLocalScheduler(Scheduler):
@@ -39,6 +59,12 @@ class ShardLocalScheduler(Scheduler):
         i = self._rr.get(shard.name, 0)
         self._rr[shard.name] = i + 1
         return members[i % len(members)]
+
+    def pick_batch(self, shard, keys, nodes, pool_nodes, resource="gpu"):
+        # batch-aware dispatch: the whole batch is one occupancy, so take
+        # the shard member with the least outstanding work on `resource`
+        up = [n for n in shard.nodes if nodes[n].up]
+        return _least_loaded_on(up or list(shard.nodes), nodes, resource)
 
     def name(self):
         return "affinity"
@@ -73,6 +99,15 @@ class ReplicaScheduler(Scheduler):
             return (sum(len(q) for q in node.queues.values())
                     + sum(node.in_use.values()))
         return min(cand, key=load)
+
+    def pick_batch(self, shard, keys, nodes, pool_nodes, resource="gpu"):
+        # same replica fan-out as pick, but ranked by the batch's resource
+        try:
+            homes = self.store.pool_for(keys[0]).replica_homes(keys[0])
+        except KeyError:
+            homes = [shard]
+        cand = [n for h in homes for n in h.nodes if nodes[n].up]
+        return _least_loaded_on(cand or list(shard.nodes), nodes, resource)
 
     def name(self):
         return "replica_affinity"

@@ -7,9 +7,18 @@ DES whose primitives are the ones that determine placement behavior:
   * links with bandwidth + RTT (cluster and cloud profiles),
   * the affinity-grouped CascadeStore for placement/caching,
   * UDL tasks written as python *generators* yielding ops
-    (Get / Put / Trigger / Compute / Sleep) — the sim advances virtual time
-    around them, so the RCP application code reads like the paper's
-    pseudo-code while queueing/transfer effects are modeled faithfully.
+    (Get / Put / Trigger / Compute / BatchCompute / Sleep / WaitFor) — the
+    sim advances virtual time around them, so the RCP application code reads
+    like the paper's pseudo-code while queueing/transfer effects are modeled
+    faithfully.
+
+The event loop is built for scale: a stable heap whose entries carry a
+bound handler + argument tuple (one tuple per event instead of a chain of
+closures), ops dispatched through a per-type handler table, and node /
+resource state touched through locals inside the handlers.  ``BatchCompute``
+is the batched counterpart of ``Compute``: one resource occupancy that
+covers ``n`` coalesced stage firings (see ``repro.workflows.batching``),
+with the batch size recorded in ``metrics["batch_sizes"]``.
 
 Node failures, stragglers (per-node slowdown factors) and hedged retries are
 injectable (see repro.runtime.faults).
@@ -79,8 +88,44 @@ class Compute:
 
 
 @dataclasses.dataclass
+class BatchCompute:
+    """One resource occupancy covering ``n`` coalesced task firings.
+
+    ``seconds`` is the total (already amortized) service time of the batch —
+    the op is accounted exactly like a ``Compute`` of that duration, and the
+    batch size lands in ``Simulator.metrics["batch_sizes"]`` so sweeps can
+    report realized coalescing.
+    """
+    resource: str
+    seconds: float
+    n: int = 1
+
+
+@dataclasses.dataclass
 class Sleep:
     seconds: float
+
+
+class SimFuture:
+    """A one-shot virtual-time synchronization point.
+
+    Tasks block on it with ``yield WaitFor(future)``; anyone (another task,
+    a scheduled callback) completes it with ``Simulator.resolve``, which
+    resumes every waiter at the current virtual time.  This is the
+    primitive cross-task barriers (e.g. batched stage execution) build on
+    without round-tripping through the object store.
+    """
+    __slots__ = ("done", "value", "_waiting")
+
+    def __init__(self):
+        self.done = False
+        self.value: Any = None
+        self._waiting: List[Callable[[Any], None]] = []
+
+
+@dataclasses.dataclass
+class WaitFor:
+    future: SimFuture
 
 
 TaskGen = Generator[Any, Any, None]
@@ -112,6 +157,9 @@ class Node:
 # Simulator
 # ---------------------------------------------------------------------------
 
+_NO_ARG = object()          # sentinel: event handler takes no argument
+
+
 class Simulator:
     def __init__(self, store: CascadeStore, nodes: Dict[str, Node],
                  net: NetProfile = CLUSTER_NET, seed: int = 0,
@@ -121,7 +169,7 @@ class Simulator:
         self.net = net
         self.now = 0.0
         self.rng = random.Random(seed)
-        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._heap: List[Tuple[float, int, Callable, Any]] = []
         self._seq = itertools.count()
         self.local_get_cost = local_get_cost
         # task bookkeeping
@@ -131,24 +179,68 @@ class Simulator:
         self.udl_dispatch: Optional[Callable] = None  # set by Runtime
         self._waiters: Dict[str, List[Tuple[Node, Any, Callable]]] = \
             defaultdict(list)
+        # per-op-type handler table (replaces an isinstance chain in the
+        # hot path); exact-type keyed — subclassed ops resolve through
+        # _handler_for, which memoizes the subclass into the table
+        self._handlers: Dict[type, Callable] = {
+            Compute: self._op_compute,
+            BatchCompute: self._op_compute,
+            Sleep: self._op_sleep,
+            Get: self._op_get,
+            Put: self._op_put,
+            Trigger: self._op_put,
+            WaitFor: self._op_wait,
+        }
 
     # -- event loop ---------------------------------------------------------
 
-    def at(self, t: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (max(t, self.now), next(self._seq), fn))
+    def at(self, t: float, fn: Callable, arg: Any = _NO_ARG) -> None:
+        """Schedule ``fn`` (optionally ``fn(arg)``) at virtual time ``t``.
 
-    def after(self, dt: float, fn: Callable[[], None]) -> None:
-        self.at(self.now + dt, fn)
+        Carrying the argument in the heap entry lets hot-path handlers be
+        bound methods + a tuple instead of a freshly allocated closure per
+        op; same-time events keep FIFO order through the sequence column.
+        """
+        if t < self.now:
+            t = self.now
+        heapq.heappush(self._heap, (t, next(self._seq), fn, arg))
+
+    def after(self, dt: float, fn: Callable, arg: Any = _NO_ARG) -> None:
+        self.at(self.now + dt, fn, arg)
 
     def run(self, until: float = float("inf")) -> None:
-        while self._heap:
-            t, _, fn = heapq.heappop(self._heap)
-            if t > until:
-                self.now = until
-                return
-            self.now = t
-            self.events_fired += 1
-            fn()
+        heap = self._heap
+        pop = heapq.heappop
+        no_arg = _NO_ARG
+        fired = 0
+        try:
+            while heap:
+                item = pop(heap)
+                t = item[0]
+                if t > until:
+                    heapq.heappush(heap, item)   # keep it for a later run()
+                    self.now = until
+                    return
+                self.now = t
+                fired += 1
+                if item[3] is no_arg:
+                    item[2]()
+                else:
+                    item[2](item[3])
+        finally:
+            self.events_fired += fired
+
+    # -- futures ------------------------------------------------------------
+
+    def resolve(self, future: SimFuture, value: Any = None) -> None:
+        """Complete a ``SimFuture``, resuming every waiter at time ``now``."""
+        if future.done:
+            return
+        future.done = True
+        future.value = value
+        waiting, future._waiting = future._waiting, []
+        for cont in waiting:
+            self.at(self.now, cont, value)
 
     # -- resources ------------------------------------------------------------
 
@@ -183,90 +275,126 @@ class Simulator:
         """Run a generator task on a node, advancing sim time per op."""
         node = self.nodes[node_name]
         node.n_tasks += 1
+        send = gen.send
+        handlers = self._handlers
 
         def step(send_value=None):
             try:
-                op = gen.send(send_value)
+                op = send(send_value)
             except StopIteration:
                 self.completed_tasks += 1
                 if done is not None:
                     done()
                 return
-            self._execute(node, op, step)
+            handler = handlers.get(type(op)) or self._handler_for(op)
+            handler(node, op, step)
 
         step(None)
 
+    def _handler_for(self, op: Any) -> Callable:
+        """Slow-path lookup for subclassed ops: resolve by isinstance and
+        memoize the concrete type into the handler table."""
+        for cls in (Compute, BatchCompute, Sleep, Get, Trigger, Put,
+                    WaitFor):
+            if isinstance(op, cls):
+                handler = self._handlers[cls]
+                self._handlers[type(op)] = handler
+                return handler
+        raise TypeError(f"unknown op {op!r}")
+
     def _execute(self, node: Node, op: Any, cont: Callable[[Any], None]):
-        if isinstance(op, Compute):
-            dur = op.seconds / max(node.speed, 1e-9)
+        """Execute one op for ``cont`` — the re-dispatch entry point used by
+        waiter wake-ups (``Get(wait=True)`` satisfied by a later put)."""
+        handler = self._handlers.get(type(op)) or self._handler_for(op)
+        handler(node, op, cont)
 
-            def start():
-                def finish():
-                    node.busy_time[op.resource] += dur
-                    self.release(node, op.resource)
-                    cont(None)
-                self.after(dur, finish)
-            self.acquire(node, op.resource, start)
+    # -- op handlers --------------------------------------------------------
 
-        elif isinstance(op, Sleep):
-            self.after(op.seconds, lambda: cont(None))
+    def _op_compute(self, node: Node, op, cont) -> None:
+        dur = op.seconds / max(node.speed, 1e-9)
 
-        elif isinstance(op, Get):
-            rec, local = self.store.get(op.key, node=node.name)
-            if rec is None:
-                if op.wait:
-                    self._waiters[op.key].append((node, op, cont))
-                    return
-                if op.required:
-                    raise KeyError(f"missing object {op.key} at t={self.now}")
-                self.after(self.local_get_cost, lambda: cont(None))
-                return
-            if local:
-                self.after(self.local_get_cost, lambda: cont(rec.value))
-            else:
-                dt = self.net.transfer_time(rec.size)
+        def start():
+            self.at(self.now + dur, self._compute_done,
+                    (node, op, cont, dur))
+        self.acquire(node, op.resource, start)
 
-                def start_xfer():
-                    def finish():
-                        self.release(node, "nic")
-                        cont(rec.value)
-                    self.after(dt, finish)
-                self.acquire(node, "nic", start_xfer)
+    def _compute_done(self, arg) -> None:
+        node, op, cont, dur = arg
+        node.busy_time[op.resource] += dur
+        if isinstance(op, BatchCompute):
+            self.metrics["batch_sizes"].append(op.n)
+        self.release(node, op.resource)
+        cont(None)
 
-        elif isinstance(op, (Put, Trigger)):
-            fire = isinstance(op, Trigger) or op.fire
-            if isinstance(op, Put):
-                sync0 = self.store.stats.bytes_replica_sync
-                shard, udls = self.store.put(op.key, op.value, size=op.size,
-                                             fire=fire)
-                # replication cost: object ships to every member not local
-                remote = [n for n in shard.nodes if n != node.name]
-                dt = self.net.transfer_time(op.size) if remote else \
-                    self.local_get_cost
-                # cross-shard replica fan-out (ReplicatedPlacement): async
-                # sync that still occupies the writer's NIC
-                sync_bytes = self.store.stats.bytes_replica_sync - sync0
-                if sync_bytes:
-                    self._charge_transfer(node, sync_bytes)
-            else:
-                shard, udls = self.store.trigger(op.key, op.value,
-                                                 size=op.size)
-                remote = [n for n in shard.nodes if n != node.name]
-                dt = self.net.transfer_time(op.size) if remote else \
-                    self.local_get_cost
+    def _op_sleep(self, node: Node, op, cont) -> None:
+        self.at(self.now + op.seconds, cont, None)
 
-            def delivered():
-                if isinstance(op, Put) and op.key in self._waiters:
-                    for wnode, wop, wcont in self._waiters.pop(op.key):
-                        self._execute(wnode, wop, wcont)
-                if fire and udls and self.udl_dispatch is not None:
-                    for u in udls:
-                        self.udl_dispatch(u, shard, op.key, op.value)
-                cont(None)
-            self.after(dt, delivered)
-
+    def _op_wait(self, node: Node, op, cont) -> None:
+        future = op.future
+        if future.done:
+            self.at(self.now, cont, future.value)
         else:
-            raise TypeError(f"unknown op {op!r}")
+            future._waiting.append(cont)
+
+    def _op_get(self, node: Node, op, cont) -> None:
+        rec, local = self.store.get(op.key, node=node.name)
+        if rec is None:
+            if op.wait:
+                self._waiters[op.key].append((node, op, cont))
+                return
+            if op.required:
+                raise KeyError(f"missing object {op.key} at t={self.now}")
+            self.at(self.now + self.local_get_cost, cont, None)
+            return
+        if local:
+            self.at(self.now + self.local_get_cost, cont, rec.value)
+        else:
+            dt = self.net.transfer_time(rec.size)
+
+            def start_xfer():
+                self.at(self.now + dt, self._xfer_done,
+                        (node, cont, rec.value))
+            self.acquire(node, "nic", start_xfer)
+
+    def _xfer_done(self, arg) -> None:
+        node, cont, value = arg
+        self.release(node, "nic")
+        cont(value)
+
+    def _op_put(self, node: Node, op, cont) -> None:
+        is_put = not isinstance(op, Trigger)
+        fire = (not is_put) or op.fire
+        if is_put:
+            sync0 = self.store.stats.bytes_replica_sync
+            shard, udls = self.store.put(op.key, op.value, size=op.size,
+                                         fire=fire)
+            # replication cost: object ships to every member not local
+            remote = [n for n in shard.nodes if n != node.name]
+            dt = self.net.transfer_time(op.size) if remote else \
+                self.local_get_cost
+            # cross-shard replica fan-out (ReplicatedPlacement): async
+            # sync that still occupies the writer's NIC
+            sync_bytes = self.store.stats.bytes_replica_sync - sync0
+            if sync_bytes:
+                self._charge_transfer(node, sync_bytes)
+        else:
+            shard, udls = self.store.trigger(op.key, op.value,
+                                             size=op.size)
+            remote = [n for n in shard.nodes if n != node.name]
+            dt = self.net.transfer_time(op.size) if remote else \
+                self.local_get_cost
+        self.at(self.now + dt, self._put_delivered,
+                (op, is_put, fire, shard, udls, cont))
+
+    def _put_delivered(self, arg) -> None:
+        op, is_put, fire, shard, udls, cont = arg
+        if is_put and op.key in self._waiters:
+            for wnode, wop, wcont in self._waiters.pop(op.key):
+                self._execute(wnode, wop, wcont)
+        if fire and udls and self.udl_dispatch is not None:
+            for u in udls:
+                self.udl_dispatch(u, shard, op.key, op.value)
+        cont(None)
 
     # -- background transfers ------------------------------------------------
 
@@ -277,10 +405,12 @@ class Simulator:
         dt = self.net.transfer_time(nbytes)
 
         def start():
-            def finish():
-                self.release(node, "nic")
-                self.metrics["background_xfer_s"].append(dt)
-                if done is not None:
-                    done()
-            self.after(dt, finish)
+            self.at(self.now + dt, self._bg_xfer_done, (node, dt, done))
         self.acquire(node, "nic", start)
+
+    def _bg_xfer_done(self, arg) -> None:
+        node, dt, done = arg
+        self.release(node, "nic")
+        self.metrics["background_xfer_s"].append(dt)
+        if done is not None:
+            done()

@@ -11,7 +11,11 @@ network/queue components we cannot measure on CPU:
     transfer time = state_bytes / interconnect_bw (the cost affinity
     routing exists to avoid);
   * decode is genuinely batched: one ``decode_step`` advances every active
-    slot of the row by one token.
+    slot of the row by one token, and the *virtual* cost of a step is
+    priced by the shared ``repro.runtime.batching.BatchCostModel`` — the
+    same curve the workflow layer's StageBatcher uses — amortized over the
+    row's active slots, so co-residency (what affinity routing maximizes)
+    directly buys decode throughput.
 
 Service times (prefill/decode-step) are measured on the real model once and
 reused by the virtual clock, so relative policy effects are grounded.
@@ -27,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.runtime.batching import BatchCostModel
 from repro.runtime.simulation import CLUSTER_NET, NetProfile
 from . import kv_cache as kvc
 from .adapters import AdapterStore, apply_adapter
@@ -70,13 +75,15 @@ class ServingEngine:
     def __init__(self, model: Model, params: Any, n_rows: int = 4,
                  max_slots: int = 8, max_seq: int = 256,
                  policy: str = "affinity",
-                 net: NetProfile = CLUSTER_NET, seed: int = 0):
+                 net: NetProfile = CLUSTER_NET, seed: int = 0,
+                 cost_model: Optional[BatchCostModel] = None):
         self.model = model
         self.rows = [Row(model, params, max_slots, max_seq)
                      for _ in range(n_rows)]
         self.router = SessionRouter(n_rows, policy=policy, seed=seed)
         self.adapters = AdapterStore(n_rows)
         self.net = net
+        self.cost_model = cost_model or BatchCostModel(max_batch=max_slots)
         self.max_seq = max_seq
         self.sessions: Dict[str, Session] = {}
         self.metrics: List[TurnMetrics] = []
@@ -165,7 +172,12 @@ class ServingEngine:
         t_prefill = self._svc["prefill_per_tok"] * len(toks)
         for tok in toks:
             row.cache, row.lengths = self._advance(row, slot, tok)
-        ttft = (t + t_prefill + self._svc["decode_step"]) - now
+        # virtual step cost: the shared batching curve amortized over the
+        # row's co-resident sessions — one real decode_step advances every
+        # active slot, so a fuller row prices each token cheaper
+        t_step = self.cost_model.step_seconds(self._svc["decode_step"],
+                                              row.load())
+        ttft = (t + t_prefill + t_step) - now
 
         out: List[int] = []
         adapter = (self.adapters.get(s.adapter) if s.adapter else None)
@@ -176,7 +188,7 @@ class ServingEngine:
                                                            adapter)
             out.append(int(nxt))
             tok = int(nxt)
-            t_dec += self._svc["decode_step"]
+            t_dec += t_step
             row.decoded_tokens += row.load()
 
         row.busy_until = t + t_prefill + t_dec

@@ -1,4 +1,5 @@
 """Event-triggered workflow graphs over affinity groups (paper §2, §4.5)."""
+from .batching import BatchPolicy, StageBatcher
 from .graph import (INSTANCE, Emit, Pool, Read, Stage, Tier, WorkflowGraph,
                     WorkflowGraphError)
 from .runtime import InstanceRecord, InstanceTracker, WorkflowRuntime
@@ -6,6 +7,7 @@ from .library import (WORKFLOW_SHAPES, index_keys, mode_kwargs,
                       preload_index, rag_workflow, speech_workflow)
 
 __all__ = [
+    "BatchPolicy", "StageBatcher",
     "INSTANCE", "Emit", "Pool", "Read", "Stage", "Tier", "WorkflowGraph",
     "WorkflowGraphError",
     "InstanceRecord", "InstanceTracker", "WorkflowRuntime",

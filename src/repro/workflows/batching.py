@@ -1,0 +1,194 @@
+"""Affinity-aware cross-instance stage batching.
+
+Workflow-atomic placement pins every instance of a workflow to one shard
+slot, so instances that fire the *same stage* on the *same slot* within a
+short window are perfect batch candidates: their model weights, code and
+data are already co-resident — the affinity label is exactly the grouping
+signal serving systems (Vortex 2511.02062) and pipeline tuners (InferLine
+1812.01776) have to infer from traffic.
+
+``StageBatcher`` coalesces such firings into ONE
+:class:`repro.runtime.simulation.BatchCompute` priced by the shared
+:class:`repro.runtime.batching.BatchCostModel`, while leaving every piece
+of per-instance accounting — join-barrier arrivals, per-stage spans,
+deadlines, emitted objects — exact: only the compute op is shared, the
+per-instance generators block on a :class:`repro.runtime.simulation.SimFuture`
+and resume individually when the batch completes.
+
+Flush rules (head-of-line-blocking control):
+
+  * **window** — a batch holds at most ``window`` virtual seconds after it
+    opens;
+  * **size cap** — reaching ``max_batch`` members flushes immediately;
+  * **idle flush** — if the stage's resource has a free lane on the slot's
+    nodes when a batch opens, it flushes immediately: there is nothing to
+    wait for, so an unloaded system pays zero added latency (batching only
+    "turns on" under contention, exactly when it pays);
+  * **SLO flush** — a member whose deadline cannot absorb the wait +
+    amortized batch service flushes the batch at enrollment, so window
+    waits never push a feasible instance past its deadline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.runtime.batching import BatchCostModel
+from repro.runtime.simulation import BatchCompute, SimFuture, WaitFor
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """Knobs for batch formation (per-runtime; sweeps vary these)."""
+    window: float = 0.004        # max virtual seconds a batch stays open
+    max_batch: int = 16          # flush at this many members
+    idle_flush: bool = True      # flush a fresh batch if the resource idles
+    slo_margin: float = 0.0      # extra headroom reserved before deadlines
+
+
+class _OpenBatch:
+    __slots__ = ("stage", "slot", "resource", "unit_cost", "keys",
+                 "future", "flush_at", "closed", "deadline_min")
+
+    def __init__(self, stage: str, slot: str, resource: str,
+                 unit_cost: float, flush_at: float):
+        self.stage = stage
+        self.slot = slot
+        self.resource = resource
+        self.unit_cost = unit_cost
+        self.keys: List[str] = []
+        self.future = SimFuture()
+        self.flush_at = flush_at
+        self.closed = False
+        self.deadline_min: Optional[float] = None   # tightest member deadline
+
+
+class StageBatcher:
+    """Coalesce same-(stage, slot) firings into one ``BatchCompute``.
+
+    Stage generators call :meth:`compute` (a sub-generator) in place of
+    yielding a plain ``Compute``; the batcher enrolls them and they block
+    on the batch's future.  The flush spawns one system task — placed by
+    the runtime scheduler's batch-aware ``pick_batch`` — that executes the
+    amortized ``BatchCompute`` and resolves the future, resuming every
+    member at the batch's completion time.
+    """
+
+    def __init__(self, runtime, policy: Optional[BatchPolicy] = None,
+                 cost_model: Optional[BatchCostModel] = None):
+        self.rt = runtime                      # repro.runtime.Runtime
+        self.sim = runtime.sim
+        self.policy = policy or BatchPolicy()
+        self.cost_model = cost_model or BatchCostModel(
+            max_batch=self.policy.max_batch)
+        self._open: Dict[Tuple[str, str], _OpenBatch] = {}
+        # realized-coalescing stats (summary() reports them)
+        self.n_batches = 0
+        self.enrolled = 0
+        self.slo_flushes = 0
+        self.idle_flushes = 0
+
+    # -- enrollment (called from inside stage generators) -------------------
+
+    def compute(self, ctx, stage, deadline: Optional[float] = None):
+        """Sub-generator replacing ``yield Compute(stage.resource, cost)``.
+
+        ``ctx`` is the stage's TaskContext (carries the dispatch shard —
+        the batch key's slot); ``deadline`` the instance's absolute
+        deadline, if any, for the SLO flush rule.
+        """
+        now = self.sim.now
+        bkey = (stage.name, ctx.shard)
+        batch = self._open.get(bkey)
+        fresh = batch is None
+        if fresh:
+            batch = _OpenBatch(stage.name, ctx.shard, stage.resource,
+                               stage.cost, now + self.policy.window)
+            self._open[bkey] = batch
+        batch.keys.append(ctx.key)
+        self.enrolled += 1
+        if deadline is not None:
+            if batch.deadline_min is None or deadline < batch.deadline_min:
+                batch.deadline_min = deadline
+        if fresh and self.policy.idle_flush and \
+                self._resource_idle(batch):
+            # nothing ahead of us: waiting can only add latency
+            self.idle_flushes += 1
+            self._flush(batch)
+        elif batch.deadline_min is not None and not batch.closed:
+            # SLO-aware early flush, re-evaluated against the TIGHTEST
+            # member deadline on every enrollment: growing the batch grows
+            # its service time, so a member admitted safely at n=k can
+            # become infeasible at n=k+1 — if riding out the window would
+            # land that member past its headroom, go now
+            est = self.cost_model.batch_seconds(batch.unit_cost,
+                                                len(batch.keys))
+            if batch.flush_at + est + self.policy.slo_margin > \
+                    batch.deadline_min:
+                self.slo_flushes += 1
+                self._flush(batch)
+        if not batch.closed and len(batch.keys) >= self.policy.max_batch:
+            self._flush(batch)
+        if fresh and not batch.closed:
+            # schedule the window flush only for batches that actually
+            # stay open — idle-flushed ones never touch the event heap
+            self.sim.at(batch.flush_at, self._window_flush, batch)
+        yield WaitFor(batch.future)
+
+    # -- flushing -----------------------------------------------------------
+
+    def _window_flush(self, batch: _OpenBatch) -> None:
+        if not batch.closed:
+            self._flush(batch)
+
+    def _flush(self, batch: _OpenBatch) -> None:
+        batch.closed = True
+        self._open.pop((batch.stage, batch.slot), None)
+        n = len(batch.keys)
+        seconds = self.cost_model.batch_seconds(batch.unit_cost, n)
+        binding = self.rt.bindings[batch.stage]
+        shard = self._shard_of(batch)
+        node = self.rt.scheduler.pick_batch(
+            shard, batch.keys, self.rt.nodes, binding.pool_nodes,
+            resource=batch.resource)
+        self.n_batches += 1
+        self.sim.spawn(node, self._run_batch(batch, seconds, n),
+                       label=f"batch:{batch.stage}")
+
+    def _run_batch(self, batch: _OpenBatch, seconds: float, n: int):
+        yield BatchCompute(batch.resource, seconds, n)
+        self.sim.resolve(batch.future)
+
+    # -- helpers ------------------------------------------------------------
+
+    def _shard_of(self, batch: _OpenBatch):
+        pool = self.rt.store.pool_for(batch.keys[0])
+        return pool.shards[batch.slot]
+
+    def _resource_idle(self, batch: _OpenBatch) -> bool:
+        """A free lane with an empty queue on any of the slot's nodes?"""
+        nodes = self.rt.nodes
+        for name in self._shard_of(batch).nodes:
+            node = nodes[name]
+            if not node.up:
+                continue
+            if (node.in_use[batch.resource]
+                    < node.capacity.get(batch.resource, 1)
+                    and not node.queues[batch.resource]):
+                return True
+        return False
+
+    # -- reporting ----------------------------------------------------------
+
+    def summary(self) -> Dict[str, float]:
+        sizes = self.sim.metrics.get("batch_sizes", [])
+        out = {
+            "batches": self.n_batches,
+            "batched_tasks": self.enrolled,
+            "slo_flushes": self.slo_flushes,
+            "idle_flushes": self.idle_flushes,
+        }
+        if sizes:
+            out["mean_batch"] = sum(sizes) / len(sizes)
+            out["max_batch"] = max(sizes)
+        return out

@@ -99,6 +99,7 @@ class Stage:
     sink: bool = False                    # completing this completes the inst
     body: Optional[Callable[..., Any]] = None
     order_of: Optional[Callable[[str], str]] = None
+    batchable: bool = True                # StageBatcher may coalesce firings
 
     # filled in by WorkflowGraph.validate()
     expected_arrivals: int = 1            # events/instance into this stage
@@ -153,12 +154,14 @@ class WorkflowGraph:
                   cost: float = 0.0, reads: Sequence[Read] = (),
                   emits: Sequence[Emit] = (), join: bool = False,
                   sink: bool = False, body: Optional[Callable] = None,
-                  order_of: Optional[Callable[[str], str]] = None) -> Stage:
+                  order_of: Optional[Callable[[str], str]] = None,
+                  batchable: bool = True) -> Stage:
         if any(s.name == name for s in self.stages):
             raise WorkflowGraphError(f"duplicate stage {name!r}")
         stage = Stage(name=name, pool=pool, resource=resource, cost=cost,
                       reads=list(reads), emits=list(emits), join=join,
-                      sink=sink, body=body, order_of=order_of)
+                      sink=sink, body=body, order_of=order_of,
+                      batchable=batchable)
         self.stages.append(stage)
         self._validated = False
         return stage

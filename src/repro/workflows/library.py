@@ -107,14 +107,18 @@ def mode_kwargs(mode: str) -> dict:
 
     ``keyhash`` (ungrouped raw key-hash baseline), ``affinity`` (instance
     groups, hash-of-label), ``atomic`` (instance groups + load-aware gang
-    pinning); a ``+mig`` suffix adds the migration driver on migratable
-    pools.  One definition so benchmarks, examples, and tests sweep the
-    exact same configurations.
+    pinning); suffixes compose: ``+mig`` adds the migration driver on
+    migratable pools, ``+batch`` turns on cross-instance stage batching
+    (``atomic+batch`` is the headline fig8 configuration).  One definition
+    so benchmarks, examples, and tests sweep the exact same
+    configurations.
     """
-    base, _, mig = mode.partition("+")
-    if base not in ("keyhash", "affinity", "atomic") or _ and mig != "mig":
+    base, *suffixes = mode.split("+")
+    if base not in ("keyhash", "affinity", "atomic") or \
+            any(s not in ("mig", "batch") for s in suffixes):
         raise ValueError(f"unknown workflow placement mode {mode!r}")
     return dict(grouped=base != "keyhash",
                 placement="load_aware" if base == "atomic" else "hash",
                 gang_pin=base == "atomic",
-                migrate_every=0.2 if mig == "mig" else None)
+                migrate_every=0.2 if "mig" in suffixes else None,
+                batching="batch" in suffixes)

@@ -23,6 +23,12 @@ the whole instance — objects *and* stage tasks — onto one slot.
 ``InstanceTracker`` does the per-instance accounting the RCP app used to
 hand-roll: join-barrier arrival counts, per-stage spans, end-to-end
 latency, and deadline/SLO hits.
+
+With ``batching=True`` a :class:`repro.workflows.batching.StageBatcher`
+sits between the synthesized stage generators and the DES: same-stage
+firings on the same shard slot within a window execute as one amortized
+``BatchCompute`` (the slot is what gang placement made coincide), while
+the tracker's per-instance accounting stays exact.
 """
 from __future__ import annotations
 
@@ -38,6 +44,8 @@ from repro.core.placement import PlacementPolicy
 from repro.runtime import (CLUSTER_NET, Compute, Get, NetProfile, Put,
                            ReplicaScheduler, Runtime, Scheduler,
                            ShardLocalScheduler)
+from repro.runtime.batching import BatchCostModel
+from .batching import BatchPolicy, StageBatcher
 from .graph import INSTANCE, Stage, WorkflowGraph
 
 POLICIES = {"hash": HashPlacement,
@@ -174,11 +182,16 @@ class WorkflowRuntime:
                  migrate_every: Optional[float] = None,
                  gang_pin: bool = False,
                  anchor_pool: Optional[str] = None,
-                 unpin_on_complete: bool = False):
+                 unpin_on_complete: bool = False,
+                 batching: bool = False,
+                 batch_policy: Optional[BatchPolicy] = None,
+                 cost_model: Optional[BatchCostModel] = None):
         if not graph._validated:
             graph.validate()
         assert not (gang_pin and not grouped), \
             "gang_pin needs instance affinity (grouped=True)"
+        assert not (batching and not graph.instance_tracking), \
+            "batching needs synthesized (instance-tracked) stages"
         self.graph = graph
         self.grouped = grouped
         self.placement = placement
@@ -233,6 +246,9 @@ class WorkflowRuntime:
         self.rt = Runtime(store, resources, net=net, scheduler=scheduler,
                           seed=seed)
         self.store = store
+        self.batcher: Optional[StageBatcher] = (
+            StageBatcher(self.rt, policy=batch_policy,
+                         cost_model=cost_model) if batching else None)
         if migrate_every is not None:
             for pool in graph.pools:
                 if pool.migratable:
@@ -278,7 +294,11 @@ class WorkflowRuntime:
                     for k in r.keys(inst):
                         yield Get(k, required=r.required, wait=r.wait)
                 if stage.cost > 0:
-                    yield Compute(stage.resource, stage.cost)
+                    if self.batcher is not None and stage.batchable:
+                        yield from self.batcher.compute(
+                            ctx, stage, deadline=rec.deadline)
+                    else:
+                        yield Compute(stage.resource, stage.cost)
                 for e in stage.emits:
                     for i in range(e.fanout):
                         yield Put(workflow_key(e.pool, inst,
@@ -349,4 +369,6 @@ class WorkflowRuntime:
             migrations=self.store.stats.migrations,
             bytes_migrated=self.store.stats.bytes_migrated,
         )
+        if self.batcher is not None:
+            out.update(self.batcher.summary())
         return out

@@ -1,0 +1,365 @@
+"""Cross-instance stage batching: the shared cost model, the StageBatcher's
+flush rules, accounting transparency vs the unbatched runtime, batch-aware
+dispatch, and the DES hot-path regression envelope.
+
+The hypothesis property test (random graphs x random windows) is marked
+slow and runs in the dedicated CI slow job; everything else is tier-1.
+"""
+import time
+
+import pytest
+
+from repro.core import CascadeStore
+from repro.runtime import (BatchCompute, BatchCostModel, Compute, Node, Put,
+                           Runtime, ShardLocalScheduler, SimFuture,
+                           Simulator, WaitFor)
+from repro.workflows import (BatchPolicy, WorkflowRuntime, mode_kwargs,
+                             preload_index, rag_workflow, speech_workflow)
+
+RES = {"gpu": 1, "cpu": 2, "nic": 2}
+
+
+# -- the shared cost model ----------------------------------------------------
+
+def test_cost_model_transparent_at_one():
+    m = BatchCostModel()
+    assert m.batch_seconds(0.030, 1) == pytest.approx(0.030)
+    assert m.step_seconds(0.030, 1) == pytest.approx(0.030)
+    assert m.speedup(1) == 1.0
+
+
+def test_cost_model_sublinear_then_segmented():
+    m = BatchCostModel(fixed=0.65, marginal=0.35, max_batch=16)
+    unit = 0.010
+    for n in (2, 4, 8, 16):
+        assert unit < m.batch_seconds(unit, n) < n * unit
+        assert m.speedup(n) > 1.0
+    # past max_batch amortization restarts: two full batches cost exactly
+    # twice one full batch
+    assert m.batch_seconds(unit, 32) == pytest.approx(
+        2 * m.batch_seconds(unit, 16))
+
+
+def test_cost_model_monotone_in_n():
+    m = BatchCostModel()
+    prev = 0.0
+    for n in range(1, 40):
+        cur = m.batch_seconds(1.0, n)
+        assert cur > prev
+        prev = cur
+
+
+# -- sim primitives -----------------------------------------------------------
+
+def make_sim(n_nodes=2):
+    store = CascadeStore([f"n{i}" for i in range(n_nodes)])
+    store.create_object_pool("/x", store.nodes, n_nodes,
+                             affinity_set_regex=r"/[a-z0-9]+_")
+    nodes = {n: Node(n, dict(RES)) for n in store.nodes}
+    return Simulator(store, nodes), nodes
+
+
+def test_batch_compute_is_one_occupancy():
+    """A BatchCompute(n) occupies ONE lane for its amortized duration."""
+    sim, nodes = make_sim()
+    done = []
+
+    def batch():
+        yield BatchCompute("gpu", 0.013, n=4)
+        done.append(sim.now)
+
+    def single():
+        yield Compute("gpu", 0.010)
+        done.append(sim.now)
+
+    sim.spawn("n0", batch())
+    sim.spawn("n0", single())       # queues behind the batch (1 gpu lane)
+    sim.run()
+    assert done == [pytest.approx(0.013), pytest.approx(0.023)]
+    assert nodes["n0"].busy_time["gpu"] == pytest.approx(0.023)
+    assert sim.metrics["batch_sizes"] == [4]
+
+
+def test_sim_future_resumes_all_waiters():
+    sim, _ = make_sim()
+    f = SimFuture()
+    got = []
+
+    def waiter(i):
+        v = yield WaitFor(f)
+        got.append((i, v, sim.now))
+
+    def resolver():
+        yield Compute("cpu", 0.5)
+        sim.resolve(f, "val")
+
+    for i in range(3):
+        sim.spawn("n0", waiter(i))
+    sim.spawn("n1", resolver())
+    sim.run()
+    assert sorted(got) == [(i, "val", pytest.approx(0.5)) for i in range(3)]
+
+
+def test_wait_on_resolved_future_is_immediate():
+    sim, _ = make_sim()
+    f = SimFuture()
+    sim.resolve(f, 7)
+    got = []
+
+    def waiter():
+        v = yield WaitFor(f)
+        got.append((v, sim.now))
+
+    sim.spawn("n0", waiter())
+    sim.run()
+    assert got == [(7, 0.0)]
+
+
+def test_run_until_preserves_future_events():
+    """Stopping at `until` must not drop the event past the horizon."""
+    sim, _ = make_sim()
+    seen = []
+    sim.at(1.0, lambda: seen.append(1.0))
+    sim.at(3.0, lambda: seen.append(3.0))
+    sim.run(until=2.0)
+    assert seen == [1.0] and sim.now == 2.0
+    sim.run()
+    assert seen == [1.0, 3.0]
+
+
+# -- batch-aware dispatch -----------------------------------------------------
+
+def test_pick_batch_takes_least_loaded_member():
+    store = CascadeStore(["a", "b"])
+    pool = store.create_object_pool("/x", store.nodes, 1, replication=2,
+                                    affinity_set_regex=r"/[a-z0-9]+_")
+    nodes = {n: Node(n, dict(RES)) for n in store.nodes}
+    shard = next(iter(pool.shards.values()))
+    nodes["a"].in_use["gpu"] = 1          # a is busy
+    sched = ShardLocalScheduler()
+    assert sched.pick_batch(shard, ["/x/g_1"], nodes, store.nodes,
+                            resource="gpu") == "b"
+    nodes["b"].queues["gpu"].extend([(0.0, lambda: None)] * 2)
+    assert sched.pick_batch(shard, ["/x/g_1"], nodes, store.nodes,
+                            resource="gpu") == "a"
+
+
+def test_mode_kwargs_batch_suffixes():
+    assert mode_kwargs("atomic+batch")["batching"] is True
+    assert mode_kwargs("atomic+batch")["gang_pin"] is True
+    mk = mode_kwargs("atomic+mig+batch")
+    assert mk["batching"] is True and mk["migrate_every"] is not None
+    assert mode_kwargs("atomic")["batching"] is False
+    for bad in ("atomic+bogus", "atomic+", "atomic++batch", "bogus+batch"):
+        with pytest.raises(ValueError):
+            mode_kwargs(bad)
+
+
+# -- StageBatcher end to end --------------------------------------------------
+
+def run_pair(make, n=160, shards=4, rate=240.0, window=0.024,
+             deadline=2.0, **kw):
+    """The same instance stream through unbatched and batched runtimes."""
+    out = []
+    for batching in (False, True):
+        g = make(shards=shards)
+        mk = dict(mode_kwargs("atomic"), batching=batching,
+                  batch_policy=BatchPolicy(window=window))
+        wrt = WorkflowRuntime(g, **mk, **kw)
+        if make is rag_workflow:
+            preload_index(wrt)
+        for i in range(n):
+            wrt.submit(f"req{i}", at=0.05 + i / rate, deadline=deadline)
+        wrt.run()
+        out.append(wrt)
+    return out
+
+
+def test_batching_coalesces_under_load():
+    _, b = run_pair(rag_workflow)
+    s = b.summary()
+    assert s["batches"] < s["batched_tasks"]
+    assert s["mean_batch"] > 1.0
+    assert s["max_batch"] > 1
+
+
+def test_batching_is_accounting_transparent():
+    """Same completion sets, join-barrier arrivals, firings, and stage-done
+    counts as the unbatched run — batching shares compute, never events."""
+    a, b = run_pair(rag_workflow)
+    assert set(a.tracker.records) == set(b.tracker.records)
+    for inst, ra in a.tracker.records.items():
+        rb = b.tracker.records[inst]
+        assert ra.t_complete is not None and rb.t_complete is not None
+        assert dict(ra.arrivals) == dict(rb.arrivals), inst
+        assert dict(ra.fired) == dict(rb.fired), inst
+        assert dict(ra.done) == dict(rb.done), inst
+
+
+def test_batching_improves_overloaded_tail():
+    a, b = run_pair(rag_workflow, n=240, rate=360.0)
+    sa, sb = a.summary(), b.summary()
+    assert sb["p99"] <= sa["p99"]
+    assert sb["slo_miss_rate"] <= sa["slo_miss_rate"]
+
+
+def test_idle_flush_keeps_unloaded_latency_exact():
+    """At low load every batch flushes on the idle rule: zero added wait."""
+    a, b = run_pair(speech_workflow, n=40, rate=30.0, window=0.050)
+    sa, sb = a.summary(), b.summary()
+    assert sb["idle_flushes"] > 0
+    for inst, ra in a.tracker.records.items():
+        assert b.tracker.records[inst].latency == pytest.approx(
+            ra.latency, rel=1e-9), inst
+
+
+def test_slo_flush_protects_tight_deadlines():
+    """A member that cannot afford the window flushes the batch early."""
+    _, b = run_pair(rag_workflow, n=120, rate=240.0, window=0.100,
+                    deadline=0.150)
+    s = b.summary()
+    assert s["slo_flushes"] > 0
+
+
+def test_slo_flush_rechecks_earlier_members_as_batch_grows():
+    """A tight-deadline member admitted safely at n=1 must still force a
+    flush when later loose members grow the batch past its headroom."""
+    g = rag_workflow(shards=1)
+    mk = dict(mode_kwargs("atomic"), batching=True,
+              batch_policy=BatchPolicy(window=0.100, max_batch=16,
+                                       idle_flush=False))
+    wrt = WorkflowRuntime(g, **mk)
+    preload_index(wrt)
+    # one tight instance first, then a burst of loose ones: at n=1 the
+    # tight deadline clears flush_at + est(1), but each loose enrollment
+    # grows est — the re-check must flush before the tight member's
+    # 0.16 s headroom is gone (generate: 0.030s gpu; est(16) ≈ 0.19s)
+    wrt.submit("tight", at=0.001, deadline=0.160)
+    for i in range(15):
+        wrt.submit(f"loose{i}", at=0.002 + i * 1e-4, deadline=10.0)
+    wrt.run()
+    s = wrt.summary()
+    assert s["slo_flushes"] > 0
+    assert not wrt.tracker.records["tight"].missed_deadline
+
+
+def test_size_cap_flushes_immediately():
+    g = rag_workflow(shards=2)
+    mk = dict(mode_kwargs("atomic"), batching=True,
+              batch_policy=BatchPolicy(window=1.0, max_batch=3,
+                                       idle_flush=False))
+    wrt = WorkflowRuntime(g, **mk)
+    preload_index(wrt)
+    for i in range(18):
+        wrt.submit(f"req{i}", at=0.01 + i * 1e-4)
+    wrt.run()
+    sizes = wrt.rt.sim.metrics["batch_sizes"]
+    assert sizes and max(sizes) <= 3
+    assert any(sz == 3 for sz in sizes)
+
+
+def test_non_batchable_stage_stays_unbatched():
+    g = rag_workflow(shards=2)
+    for st in g.stages:
+        st.batchable = False
+    wrt = WorkflowRuntime(g, **mode_kwargs("atomic+batch"))
+    preload_index(wrt)
+    for i in range(12):
+        wrt.submit(f"req{i}", at=0.01 + i * 1e-3)
+    wrt.run()
+    assert wrt.summary()["n"] == 12
+    assert wrt.batcher.enrolled == 0
+
+
+# -- DES hot-path regression envelope ----------------------------------------
+
+def _event_trace_runtime(n_tasks):
+    store = CascadeStore([f"n{i}" for i in range(8)])
+    store.create_object_pool("/x", store.nodes, 8,
+                             affinity_set_regex=r"/[a-z0-9]+_")
+    rt = Runtime(store)
+
+    def task(ctx, key, value):
+        yield Compute("gpu", 0.001)
+        yield Put(key + "o", size=64, fire=False)
+    rt.register("/x", task)
+    for i in range(n_tasks):
+        rt.client_put(i * 1e-4, f"/x/g{i % 64}_{i}", size=16)
+    return rt
+
+
+def test_event_loop_50k_trace_envelope():
+    """Regression guard for the DES hot path: a fixed 12.5k-task trace is
+    exactly 50k heap events (op-count envelope — any extra per-op event
+    is a hot-path regression) inside a generous wall budget that still
+    catches accidental O(n^2) scans."""
+    rt = _event_trace_runtime(12_500)
+    t0 = time.perf_counter()
+    rt.run()
+    wall = time.perf_counter() - t0
+    assert rt.sim.events_fired == 50_000
+    assert rt.sim.completed_tasks == 12_500
+    assert wall < 5.0, f"50k-event trace took {wall:.2f}s"
+
+
+# -- property: batching transparency over random graphs (slow job) ------------
+
+@pytest.mark.slow
+def test_batching_transparency_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    from repro.workflows import Emit, WorkflowGraph
+
+    def chain_workflow(chain, n_shards):
+        g = WorkflowGraph("prop")
+        g.add_tier("t", n_shards, dict(RES))
+        for i in range(len(chain) + 1):
+            g.add_pool(f"/p{i}", tier="t", shards=n_shards)
+        for i, (fanout, join, cost) in enumerate(chain):
+            g.add_stage(f"s{i}", pool=f"/p{i}", resource="gpu",
+                        cost=cost * 1e-3,
+                        emits=[Emit(f"/p{i + 1}", fanout=fanout, size=64)],
+                        join=join and i > 0, sink=(i == len(chain) - 1))
+        return g.validate()
+
+    CHAINS = st.lists(
+        st.tuples(st.integers(min_value=1, max_value=3),     # fanout
+                  st.booleans(),                             # join barrier
+                  st.integers(min_value=0, max_value=20)),   # cost (ms)
+        min_size=1, max_size=4)
+
+    @given(CHAINS,
+           st.integers(min_value=1, max_value=6),            # shards
+           st.integers(min_value=1, max_value=12),           # instances
+           st.floats(min_value=1e-4, max_value=0.05))        # window
+    @settings(max_examples=25, deadline=None)
+    def prop(chain, n_shards, n_instances, window):
+        runs = []
+        for batching in (False, True):
+            g = chain_workflow(chain, n_shards)
+            mk = dict(mode_kwargs("atomic"), batching=batching,
+                      batch_policy=BatchPolicy(window=window))
+            wrt = WorkflowRuntime(g, **mk)
+            for i in range(n_instances):
+                wrt.submit(f"i{i}", at=0.001 + i * 0.002)
+            wrt.run()
+            runs.append(wrt)
+        unb, bat = runs
+        # 1) accounting transparency: identical completion sets and
+        #    join-barrier/firing/done counters per instance
+        assert set(unb.tracker.records) == set(bat.tracker.records)
+        worst_extra = len(chain) * window + sum(
+            BatchCostModel().batch_seconds(c * 1e-3, 16) - c * 1e-3
+            for _, _, c in chain)
+        for inst, ru in unb.tracker.records.items():
+            rb = bat.tracker.records[inst]
+            assert ru.t_complete is not None and rb.t_complete is not None
+            assert dict(ru.arrivals) == dict(rb.arrivals)
+            assert dict(ru.fired) == dict(rb.fired)
+            assert dict(ru.done) == dict(rb.done)
+            # 2) SLO bound: window waits + batch amortization can never
+            #    push an instance past the unbatched latency plus one
+            #    window and one worst-case batch per stage
+            assert rb.latency <= ru.latency + worst_extra + 1e-9
+
+    prop()

@@ -14,6 +14,7 @@ README = Path(__file__).resolve().parents[1] / "README.md"
 API_DOC = DOCS / "affinity_api.md"
 ARCH_DOC = DOCS / "architecture.md"
 WORKFLOWS_DOC = DOCS / "workflows.md"
+BATCHING_DOC = DOCS / "batching.md"
 
 
 def fenced_python_blocks(text: str):
@@ -47,9 +48,11 @@ def test_docs_exist():
     assert API_DOC.exists()
     assert ARCH_DOC.exists()
     assert WORKFLOWS_DOC.exists()
+    assert BATCHING_DOC.exists()
 
 
-@pytest.mark.parametrize("doc", [API_DOC, ARCH_DOC, WORKFLOWS_DOC])
+@pytest.mark.parametrize("doc", [API_DOC, ARCH_DOC, WORKFLOWS_DOC,
+                                 BATCHING_DOC])
 def test_all_qualified_names_resolve(doc):
     names = qualified_names(doc.read_text())
     assert names, f"{doc.name} should document qualified repro.* symbols"
@@ -64,7 +67,7 @@ def test_all_qualified_names_resolve(doc):
 
 @pytest.mark.parametrize(
     "doc_idx_snippet",
-    [(doc, i, snip) for doc in (API_DOC, WORKFLOWS_DOC)
+    [(doc, i, snip) for doc in (API_DOC, WORKFLOWS_DOC, BATCHING_DOC)
      for i, snip in enumerate(fenced_python_blocks(doc.read_text()))],
     ids=lambda p: f"{p[0].stem}-snippet{p[1]}")
 def test_doc_snippets_run(doc_idx_snippet):
