@@ -69,3 +69,63 @@ def write_bench_json(suite: str, rows, wall_s: float) -> Path:
     path = ARTIFACTS / f"BENCH_{suite}.json"
     path.write_text(json.dumps(payload, indent=1, sort_keys=True))
     return path
+
+
+def load_bench_json(suite: str):
+    """The previously recorded ``BENCH_<suite>.json`` payload, or None.
+
+    Read BEFORE a fresh run overwrites the file — for the versioned
+    suites the committed copy is the cross-PR reference the regression
+    deltas compare against.
+    """
+    import json
+    path = ARTIFACTS / f"BENCH_{suite}.json"
+    if not path.exists():
+        return None
+    try:
+        return json.loads(path.read_text())
+    except ValueError:
+        return None
+
+
+# metric -> warn threshold (relative).  All are lower-is-better; wall
+# clocks get a loose bound because they measure the host, not the code.
+DELTA_METRICS = {"p50_ms": 0.05, "p99_ms": 0.05, "slo_miss": 0.0,
+                 "wall_s": 0.5}
+
+
+def bench_deltas(suite: str, prior, rows, metrics=None):
+    """Per-metric regression lines of a fresh run vs the prior record.
+
+    Returns human-readable strings (``<suite> <row> <metric> a -> b
+    (+x%)``) for every matched row whose metric regressed past its
+    threshold, plus a one-line summary.  Purely advisory: the caller
+    prints them (warn-only in CI) so the committed BENCH files become an
+    actual perf trajectory instead of a write-only artifact.
+    """
+    if not prior:
+        return []
+    thresholds = metrics or DELTA_METRICS
+    old = {r["name"]: r for r in prior.get("rows", ())}
+    out = []
+    compared = 0
+    for name, _, derived in rows:
+        ref = old.get(name)
+        if ref is None:
+            continue
+        for metric, rel in thresholds.items():
+            a, b = ref.get(metric), derived.get(metric)
+            if not (isinstance(a, (int, float)) and
+                    isinstance(b, (int, float)))or \
+                    isinstance(a, bool) or isinstance(b, bool):
+                continue
+            compared += 1
+            floor = abs(a) * rel + 1e-9
+            if b > a + floor:
+                pct = (b - a) / a * 100 if a else float("inf")
+                out.append(f"{suite} {name} {metric} {a} -> {b} "
+                           f"(+{pct:.1f}%)")
+    if compared:
+        out.append(f"{suite}: {compared} metric(s) compared vs prior "
+                   f"record, {len(out)} regressed")
+    return out

@@ -13,8 +13,9 @@ import time
 
 from . import (azure_mode, fig3_single_client, fig4_three_clients,
                fig5_no_caching, fig6_replication, fig7_workflows,
-               fig8_batching, micro_affinity, roofline, serving_affinity)
-from .common import emit, write_bench_json
+               fig8_batching, fig9_adaptive, micro_affinity, roofline,
+               serving_affinity)
+from .common import bench_deltas, emit, load_bench_json, write_bench_json
 
 SUITES = {
     "fig3": fig3_single_client,
@@ -23,6 +24,7 @@ SUITES = {
     "fig6": fig6_replication,
     "fig7": fig7_workflows,
     "fig8": fig8_batching,
+    "fig9": fig9_adaptive,
     "azure": azure_mode,
     "micro": micro_affinity,
     "serving": serving_affinity,
@@ -42,6 +44,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in names:
         mod = SUITES[name]
+        prior = load_bench_json(name)    # committed/previous record, if any
         t0 = time.perf_counter()
         try:
             rows = mod.run(quick=not args.full)
@@ -53,6 +56,11 @@ def main() -> None:
         emit(rows)
         path = write_bench_json(name, rows, wall)
         print(f"# {name}: {wall:.1f}s -> {path.name}", file=sys.stderr)
+        # perf trajectory: per-metric deltas vs the prior record.
+        # Warn-only — regressions print but never fail the run; the
+        # committed BENCH files + these lines ARE the cross-PR record.
+        for line in bench_deltas(name, prior, rows):
+            print(f"# PERF {line}", file=sys.stderr)
     if failures:
         print(f"# FAILED suites: {','.join(failures)}", file=sys.stderr)
         sys.exit(1)

@@ -2,8 +2,10 @@ from .simulation import (AZURE_NET, CLUSTER_NET, BatchCompute, Compute, Get,
                          NetProfile, Node, Put, SimFuture, Simulator, Sleep,
                          Trigger, WaitFor)
 from .batching import BatchCostModel
+from .stats import P2Quantile, StageStats
 from .scheduler import (LeastLoadedScheduler, RandomScheduler,
-                        ReplicaScheduler, Scheduler, ShardLocalScheduler)
+                        ReplicaScheduler, Scheduler, ShardLocalScheduler,
+                        node_load)
 from .executor import Runtime, TaskContext
 from .faults import FaultInjector, set_straggler
 from .autoscale import AutoScaler, ScaleDecision
@@ -13,8 +15,9 @@ __all__ = [
     "NetProfile", "Node", "Put", "SimFuture", "Simulator", "Sleep",
     "Trigger", "WaitFor",
     "BatchCostModel",
+    "P2Quantile", "StageStats",
     "LeastLoadedScheduler", "RandomScheduler", "ReplicaScheduler",
-    "Scheduler", "ShardLocalScheduler",
+    "Scheduler", "ShardLocalScheduler", "node_load",
     "Runtime", "TaskContext",
     "FaultInjector", "set_straggler",
     "AutoScaler", "ScaleDecision",

@@ -46,8 +46,14 @@ class BatchCostModel:
         assert self.max_batch >= 1, self.max_batch
 
     def batch_seconds(self, unit_seconds: float, n: int) -> float:
-        """Total service time of a batch of ``n`` unit tasks."""
-        if n <= 1:
+        """Total service time of a batch of ``n`` unit tasks.
+
+        An empty batch costs nothing; a batch of one costs exactly
+        ``unit_seconds`` (transparency).
+        """
+        if n <= 0:
+            return 0.0
+        if n == 1:
             return unit_seconds
         norm = self.fixed + self.marginal
         full, rem = divmod(n, self.max_batch)
@@ -58,9 +64,33 @@ class BatchCostModel:
         return t
 
     def step_seconds(self, unit_seconds: float, n: int) -> float:
-        """Per-participant amortized time of one batched step."""
+        """Per-participant amortized time of one batched step.
+
+        ``n <= 1`` (including an idle row) prices a full unit step —
+        ``step_seconds(u, n) * n == batch_seconds(u, n)`` for n >= 1.
+        """
         n = max(n, 1)
         return self.batch_seconds(unit_seconds, n) / n
+
+    def largest_within(self, unit_seconds: float, budget: float,
+                       wait_per_member: float = 0.0) -> int:
+        """Largest ``n <= max_batch`` whose formation wait plus amortized
+        service fits ``budget`` — the planner's feasibility search.
+
+        ``wait_per_member`` is the expected extra formation wait each
+        additional member adds (the arrival gap); total cost of a batch of
+        ``n`` is ``(n-1)*wait_per_member + batch_seconds(unit, n)``, which
+        is monotone in ``n``, so the search stops at the first overflow.
+        Returns at least 1: a singleton is always admissible (batching
+        never makes n=1 worse than unbatched).
+        """
+        n = 1
+        for k in range(2, self.max_batch + 1):
+            if (k - 1) * wait_per_member + \
+                    self.batch_seconds(unit_seconds, k) > budget:
+                break
+            n = k
+        return n
 
     def speedup(self, n: int) -> float:
         """Throughput gain of a batch of ``n`` over ``n`` sequential runs."""

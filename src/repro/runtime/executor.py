@@ -47,7 +47,8 @@ class Runtime:
                  net: NetProfile = CLUSTER_NET,
                  scheduler: Optional[Scheduler] = None,
                  seed: int = 0,
-                 hedge_after: Optional[float] = None):
+                 hedge_after: Optional[float] = None,
+                 log_tasks: bool = True):
         resources = node_resources or {
             n: {"gpu": 1, "cpu": 2, "nic": 2} for n in store.nodes}
         self.nodes = {n: Node(n, r) for n, r in resources.items()}
@@ -59,6 +60,10 @@ class Runtime:
         self.bindings: Dict[str, UDLBinding] = {}
         self.hedge_after = hedge_after
         self.hedges = 0
+        # per-task records are handy for tests/debugging but grow with the
+        # horizon; long-horizon runs turn them off (log_tasks=False) so
+        # runtime memory stays bounded by concurrency, not event count
+        self.log_tasks = log_tasks
         self.task_log: List[Dict[str, Any]] = []
         self.migrators: Dict[str, GroupMigrator] = {}   # pool -> migrator
         self.migration_log: List[Dict[str, Any]] = []
@@ -106,10 +111,11 @@ class Runtime:
 
         def done():
             self.shard_outstanding[shard.name] -= 1
-            self.task_log.append({
-                "udl": binding.udl.name, "key": key, "node": node,
-                "t_start": t0, "t_end": self.sim.now,
-            })
+            if self.log_tasks:
+                self.task_log.append({
+                    "udl": binding.udl.name, "key": key, "node": node,
+                    "t_start": t0, "t_end": self.sim.now,
+                })
             if label is not None:
                 self.sequencer.complete(label)
                 nxt = self.sequencer.ready(label)

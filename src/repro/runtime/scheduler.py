@@ -36,12 +36,23 @@ class Scheduler:
         return type(self).__name__
 
 
+def node_load(node: Node, resource: str) -> float:
+    """Fractional occupancy of ``resource`` on ``node``.
+
+    ``(in_use + queued) / capacity`` — < 1.0 means a free lane, 1.0 all
+    lanes busy with empty queues, > 1.0 a backlog ``load - 1`` service
+    slots deep.  This is THE load signal shared by batch-aware dispatch
+    (``Scheduler.pick_batch``), the adaptive batch planner's queue-depth
+    input, and the serving engine's row scheduler, so "prefer free lanes
+    and shallow queues" means the same thing at every layer.
+    """
+    cap = node.capacity.get(resource, 1) or 1
+    return (node.in_use[resource] + len(node.queues[resource])) / cap
+
+
 def _least_loaded_on(candidates: Sequence[str], nodes: Dict[str, Node],
                      resource: str) -> str:
-    def load(n: str) -> int:
-        node = nodes[n]
-        return len(node.queues[resource]) + node.in_use[resource]
-    return min(candidates, key=load)
+    return min(candidates, key=lambda n: node_load(nodes[n], resource))
 
 
 class ShardLocalScheduler(Scheduler):

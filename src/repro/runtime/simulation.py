@@ -144,6 +144,10 @@ class Node:
         self.queues: Dict[str, deque] = defaultdict(deque)
         self.speed = speed                        # <1.0 => straggler
         self.up = True
+        # admitted-but-unfinished compute seconds per resource: the
+        # "queue depth in seconds" load signal (maintained O(1) by the
+        # compute handlers) that dispatch and the batch planner read
+        self.pending: Dict[str, float] = defaultdict(float)
         # metrics
         self.busy_time: Dict[str, float] = defaultdict(float)
         self.n_tasks = 0
@@ -312,6 +316,7 @@ class Simulator:
 
     def _op_compute(self, node: Node, op, cont) -> None:
         dur = op.seconds / max(node.speed, 1e-9)
+        node.pending[op.resource] += dur
 
         def start():
             self.at(self.now + dur, self._compute_done,
@@ -320,6 +325,7 @@ class Simulator:
 
     def _compute_done(self, arg) -> None:
         node, op, cont, dur = arg
+        node.pending[op.resource] -= dur
         node.busy_time[op.resource] += dur
         if isinstance(op, BatchCompute):
             self.metrics["batch_sizes"].append(op.n)

@@ -1,0 +1,226 @@
+"""Bounded streaming statistics for the metrics hot path.
+
+``InstanceTracker`` used to append every stage span to a per-stage list
+and run ``np.percentile`` over the whole history on demand — per-sample
+memory growth and O(n log n) summary scans, quadratic once a planner
+starts reading percentiles on every flush decision.  This module replaces
+that with fixed-footprint streaming estimators in the P²/HDR family:
+
+  * :class:`P2Quantile` — the P² algorithm (Jain & Chlamtac, CACM 1985):
+    one quantile tracked with five markers updated in O(1) per
+    observation, no sample retention.  Excellent on stationary streams,
+    five floats of state.
+  * :class:`StageStats` — the per-stage primitive the tracker and the
+    batch planner read.  Count/mean/min/max exactly, quantiles from a
+    fixed log-binned (HDR-histogram-style) count array: O(1) update,
+    permutation-invariant, and the geometric bin spacing *guarantees*
+    every quantile is within ``2·(√ratio−1) ≈ 2%`` of the exact sample
+    quantile regardless of distribution or arrival order — the property
+    the planner's flush decisions rely on.  A small exact warm-up buffer
+    makes short streams numpy-exact before the histogram takes over.
+
+The planner (``repro.workflows.planner.BatchPlanner``) reads
+``StageStats.quantile`` on every batch-open decision; the whole point of
+this module is that doing so costs the same at event 10 and event 10
+million.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+DEFAULT_QUANTILES = (0.5, 0.95, 0.99)
+
+
+class P2Quantile:
+    """Streaming estimate of one quantile via the P² algorithm.
+
+    Five markers track (min, p/2, p, (1+p)/2, max); each observation
+    shifts marker positions and adjusts heights with a piecewise-parabolic
+    (hence P²) interpolation — O(1) time, O(1) space, no samples kept.
+    """
+
+    __slots__ = ("p", "count", "_h", "_pos", "_want", "_inc")
+
+    def __init__(self, p: float):
+        assert 0.0 < p < 1.0, p
+        self.p = p
+        self.count = 0
+        self._h: List[float] = []              # marker heights
+        self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]  # actual marker positions
+        self._want = [1.0, 1 + 2 * p, 1 + 4 * p, 3 + 2 * p, 5.0]
+        self._inc = [0.0, p / 2, p, (1 + p) / 2, 1.0]
+
+    def observe(self, x: float) -> None:
+        self.count += 1
+        h = self._h
+        if self.count <= 5:
+            bisect.insort(h, x)
+            return
+        pos = self._pos
+        # locate the cell and bump the extremes
+        if x < h[0]:
+            h[0] = x
+            k = 0
+        elif x >= h[4]:
+            h[4] = x
+            k = 3
+        else:
+            k = 0
+            while k < 3 and x >= h[k + 1]:
+                k += 1
+        for i in range(k + 1, 5):
+            pos[i] += 1.0
+        want = self._want
+        for i in range(5):
+            want[i] += self._inc[i]
+        # adjust the three interior markers toward their desired positions
+        for i in (1, 2, 3):
+            d = want[i] - pos[i]
+            if (d >= 1.0 and pos[i + 1] - pos[i] > 1.0) or \
+                    (d <= -1.0 and pos[i - 1] - pos[i] < -1.0):
+                step = 1.0 if d >= 1.0 else -1.0
+                cand = self._parabolic(i, step)
+                if h[i - 1] < cand < h[i + 1]:
+                    h[i] = cand
+                else:                      # parabolic left the bracket
+                    j = i + (1 if step > 0 else -1)
+                    h[i] += step * (h[j] - h[i]) / (pos[j] - pos[i])
+                pos[i] += step
+
+    def _parabolic(self, i: int, d: float) -> float:
+        h, pos = self._h, self._pos
+        return h[i] + d / (pos[i + 1] - pos[i - 1]) * (
+            (pos[i] - pos[i - 1] + d) * (h[i + 1] - h[i])
+            / (pos[i + 1] - pos[i])
+            + (pos[i + 1] - pos[i] - d) * (h[i] - h[i - 1])
+            / (pos[i] - pos[i - 1]))
+
+    def value(self) -> float:
+        """Current estimate (exact while count <= 5)."""
+        h = self._h
+        if not h:
+            return 0.0
+        if self.count <= 5:
+            return _interp_sorted(h, self.p)
+        return h[2]
+
+
+def _interp_sorted(sorted_xs: Sequence[float], q: float) -> float:
+    """numpy-style ('linear') quantile of an already-sorted sequence."""
+    n = len(sorted_xs)
+    if n == 1:
+        return sorted_xs[0]
+    rank = q * (n - 1)
+    lo = int(rank)
+    hi = min(lo + 1, n - 1)
+    frac = rank - lo
+    return sorted_xs[lo] * (1.0 - frac) + sorted_xs[hi] * frac
+
+
+class StageStats:
+    """Fixed-footprint summary of one observation stream.
+
+    Count / mean / min / max are exact.  Quantiles are exact (numpy
+    'linear') while the stream fits the ``exact_cap`` warm-up buffer;
+    beyond it they come from a geometric (log-binned) histogram spanning
+    ``[lo, hi]`` with bin ratio ``ratio`` — every estimate is the
+    geometric midpoint of its bin, so the relative value error is bounded
+    by ``√ratio − 1`` (≈2% at the default 1.04) for any distribution and
+    any arrival order.  Memory never grows past the warm-up buffer plus
+    the fixed bucket array; updates are O(1).
+
+    Negative observations are clamped to zero (spans are time deltas);
+    exact zeros get a dedicated bucket so zero-cost stages report 0.0.
+    """
+
+    __slots__ = ("count", "mean", "min", "max", "_buf", "exact_cap",
+                 "_counts", "_zeros", "_lo", "_log_ratio", "_ratio",
+                 "_nbins")
+
+    def __init__(self, exact_cap: int = 512, lo: float = 1e-7,
+                 hi: float = 1e4, ratio: float = 1.04):
+        assert 0 < lo < hi and ratio > 1.0
+        self.count = 0
+        self.mean = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+        self.exact_cap = exact_cap
+        self._buf: Optional[List[float]] = []
+        self._lo = lo
+        self._ratio = ratio
+        self._log_ratio = math.log(ratio)
+        self._nbins = int(math.ceil(math.log(hi / lo) / self._log_ratio))
+        self._counts = [0] * self._nbins
+        self._zeros = 0
+
+    def observe(self, x: float) -> None:
+        if x < 0.0:
+            x = 0.0
+        self.count += 1
+        self.mean += (x - self.mean) / self.count
+        if x < self.min:
+            self.min = x
+        if x > self.max:
+            self.max = x
+        if x <= 0.0:
+            self._zeros += 1
+        else:
+            i = int(math.log(x / self._lo) / self._log_ratio)
+            if i < 0:
+                i = 0
+            elif i >= self._nbins:
+                i = self._nbins - 1
+            self._counts[i] += 1
+        buf = self._buf
+        if buf is not None:
+            if self.count <= self.exact_cap:
+                bisect.insort(buf, x)
+            else:                 # graduate to sketch-only: free the buffer
+                self._buf = None
+
+    def quantile(self, q: float) -> float:
+        """Quantile estimate — exact inside the warm-up buffer, log-binned
+        (±(√ratio−1) relative) beyond it.  Any ``q`` in [0, 1] works."""
+        if self.count == 0:
+            return 0.0
+        if self._buf is not None:
+            return _interp_sorted(self._buf, q)
+        rank = q * self.count
+        seen = self._zeros
+        if rank <= seen:
+            # inside the zero bucket — unless it is empty (q == 0 on an
+            # all-positive stream), where the observed min is the answer
+            return 0.0 if seen else self.min
+        for i, c in enumerate(self._counts):
+            seen += c
+            if seen >= rank:
+                # geometric midpoint of the bin, clamped to observed range
+                mid = self._lo * self._ratio ** (i + 0.5)
+                return min(max(mid, self.min), self.max)
+        return self.max
+
+    @property
+    def exact(self) -> bool:
+        """True while quantiles are exact (stream within the buffer)."""
+        return self._buf is not None
+
+    def footprint(self) -> Tuple[int, int]:
+        """(buffered samples, histogram bins) — both bounded by design."""
+        n_buf = len(self._buf) if self._buf is not None else 0
+        return n_buf, self._nbins
+
+    def summary(self, quantiles: Sequence[float] = DEFAULT_QUANTILES
+                ) -> Dict[str, float]:
+        out = {"n": self.count, "mean": self.mean}
+        if self.count:
+            out["min"] = self.min
+            out["max"] = self.max
+            for q in quantiles:
+                out[f"p{round(q * 100)}"] = self.quantile(q)
+        return out
+
+    def __repr__(self):
+        return (f"StageStats(n={self.count}, mean={self.mean:.6g}, "
+                f"exact={self.exact})")

@@ -70,6 +70,11 @@ class Row:
     def load(self) -> int:
         return int(self.active.sum())
 
+    def backlog(self, now: float) -> float:
+        """Virtual seconds of queued decode work still ahead of ``now`` —
+        the row-scheduler analogue of a node's resource queue depth."""
+        return max(0.0, self.busy_until - now)
+
 
 class ServingEngine:
     def __init__(self, model: Model, params: Any, n_rows: int = 4,
@@ -123,15 +128,20 @@ class ServingEngine:
         """One chat turn: route, (maybe migrate), prefill, decode."""
         s = self.sessions[sid]
         req_id = f"{sid}:{s.turns}"
-        loads = [r.load() for r in self.rows]
-        row_idx = self.router.route(s, req_id, row_loads=loads)
-        # capacity overflow: spill to the least-loaded row with a free slot
+        # the row scheduler's load signal mirrors the DES schedulers'
+        # pick_batch ranking (repro.runtime.scheduler.node_load): prefer
+        # rows with a free lane first, then the shallowest virtual queue,
+        # then the fewest co-resident sessions
+        signals = [(0 if r.free_slot() is not None else 1,
+                    r.backlog(now), r.load()) for r in self.rows]
+        row_idx = self.router.route(s, req_id, row_loads=signals)
+        # capacity overflow: spill to the best-signal row with a free slot
         if (s.row != row_idx
                 and self.rows[row_idx].free_slot() is None):
             cands = [i for i, r in enumerate(self.rows)
                      if i == s.row or r.free_slot() is not None]
             row_idx = s.row if s.row in cands else \
-                min(cands, key=lambda i: loads[i])
+                min(cands, key=lambda i: signals[i])
         row = self.rows[row_idx]
 
         t = max(now, row.busy_until)

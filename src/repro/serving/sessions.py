@@ -49,7 +49,10 @@ class SessionRouter:
             affinity_fn=CallableAffinity(fn, name=policy))
 
     def route(self, session: Session, request_id: str,
-              row_loads: Optional[List[int]] = None) -> int:
+              row_loads: Optional[List] = None) -> int:
+        # row_loads entries are any comparable load signal; the engine
+        # passes (no-free-lane, virtual backlog, active sessions) tuples
+        # so least-loaded dispatch prefers free lanes and shallow queues
         if self.policy == "least_loaded" and row_loads is not None:
             return min(range(self.n_rows), key=lambda r: row_loads[r])
         desc = Descriptor.of(f"/requests/{request_id}", kind="task",

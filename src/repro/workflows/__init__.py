@@ -2,12 +2,14 @@
 from .batching import BatchPolicy, StageBatcher
 from .graph import (INSTANCE, Emit, Pool, Read, Stage, Tier, WorkflowGraph,
                     WorkflowGraphError)
+from .planner import AdaptiveBatchPolicy, BatchPlanner
 from .runtime import InstanceRecord, InstanceTracker, WorkflowRuntime
 from .library import (WORKFLOW_SHAPES, index_keys, mode_kwargs,
                       preload_index, rag_workflow, speech_workflow)
 
 __all__ = [
     "BatchPolicy", "StageBatcher",
+    "AdaptiveBatchPolicy", "BatchPlanner",
     "INSTANCE", "Emit", "Pool", "Read", "Stage", "Tier", "WorkflowGraph",
     "WorkflowGraphError",
     "InstanceRecord", "InstanceTracker", "WorkflowRuntime",

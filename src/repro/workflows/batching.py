@@ -19,7 +19,7 @@ Flush rules (head-of-line-blocking control):
 
   * **window** — a batch holds at most ``window`` virtual seconds after it
     opens;
-  * **size cap** — reaching ``max_batch`` members flushes immediately;
+  * **size cap** — reaching the batch's size cap flushes immediately;
   * **idle flush** — if the stage's resource has a free lane on the slot's
     nodes when a batch opens, it flushes immediately: there is nothing to
     wait for, so an unloaded system pays zero added latency (batching only
@@ -27,6 +27,17 @@ Flush rules (head-of-line-blocking control):
   * **SLO flush** — a member whose deadline cannot absorb the wait +
     amortized batch service flushes the batch at enrollment, so window
     waits never push a feasible instance past its deadline.
+
+``window``/``max_batch`` come from the static :class:`BatchPolicy`, or —
+with a :class:`repro.workflows.planner.BatchPlanner` attached — are
+re-planned per batch from streaming arrival-rate / service-percentile /
+queue-depth signals (see ``docs/batching.md``).
+
+Window-flush timers never inflate the event heap: a batch flushed at
+enrollment (idle/size/SLO rules) schedules no timer at all, and at most
+ONE pending timer exists per (stage, slot) — when a batch flushes early,
+its timer is left to roll forward to the next open batch on that key
+instead of dying as a dead heap event.
 """
 from __future__ import annotations
 
@@ -39,7 +50,8 @@ from repro.runtime.simulation import BatchCompute, SimFuture, WaitFor
 
 @dataclasses.dataclass(frozen=True)
 class BatchPolicy:
-    """Knobs for batch formation (per-runtime; sweeps vary these)."""
+    """Static knobs for batch formation (sweeps vary these; the adaptive
+    planner supersedes ``window``/``max_batch`` per batch when attached)."""
     window: float = 0.004        # max virtual seconds a batch stays open
     max_batch: int = 16          # flush at this many members
     idle_flush: bool = True      # flush a fresh batch if the resource idles
@@ -48,10 +60,10 @@ class BatchPolicy:
 
 class _OpenBatch:
     __slots__ = ("stage", "slot", "resource", "unit_cost", "keys",
-                 "future", "flush_at", "closed", "deadline_min")
+                 "future", "flush_at", "cap", "closed", "deadline_min")
 
     def __init__(self, stage: str, slot: str, resource: str,
-                 unit_cost: float, flush_at: float):
+                 unit_cost: float, flush_at: float, cap: int):
         self.stage = stage
         self.slot = slot
         self.resource = resource
@@ -59,6 +71,7 @@ class _OpenBatch:
         self.keys: List[str] = []
         self.future = SimFuture()
         self.flush_at = flush_at
+        self.cap = cap
         self.closed = False
         self.deadline_min: Optional[float] = None   # tightest member deadline
 
@@ -75,18 +88,24 @@ class StageBatcher:
     """
 
     def __init__(self, runtime, policy: Optional[BatchPolicy] = None,
-                 cost_model: Optional[BatchCostModel] = None):
+                 cost_model: Optional[BatchCostModel] = None,
+                 planner=None):
         self.rt = runtime                      # repro.runtime.Runtime
         self.sim = runtime.sim
         self.policy = policy or BatchPolicy()
         self.cost_model = cost_model or BatchCostModel(
             max_batch=self.policy.max_batch)
+        self.planner = planner                 # BatchPlanner or None
         self._open: Dict[Tuple[str, str], _OpenBatch] = {}
+        # at most one pending window timer per (stage, slot): time it fires
+        self._timer_at: Dict[Tuple[str, str], float] = {}
         # realized-coalescing stats (summary() reports them)
         self.n_batches = 0
         self.enrolled = 0
         self.slo_flushes = 0
         self.idle_flushes = 0
+        self.timers_scheduled = 0
+        self.timer_rolls = 0
 
     # -- enrollment (called from inside stage generators) -------------------
 
@@ -99,15 +118,32 @@ class StageBatcher:
         """
         now = self.sim.now
         bkey = (stage.name, ctx.shard)
+        planner = self.planner
+        if planner is not None:
+            planner.note_arrival(stage.name, ctx.shard, now)
         batch = self._open.get(bkey)
         fresh = batch is None
         if fresh:
+            if planner is not None:
+                window, cap = planner.plan(
+                    stage, ctx.shard, now, deadline,
+                    pending=self._slot_pending(ctx.key, ctx.shard,
+                                               stage.resource))
+            else:
+                window, cap = self.policy.window, self.policy.max_batch
             batch = _OpenBatch(stage.name, ctx.shard, stage.resource,
-                               stage.cost, now + self.policy.window)
+                               stage.cost, now + window, cap)
             self._open[bkey] = batch
         batch.keys.append(ctx.key)
         self.enrolled += 1
-        if deadline is not None:
+        if deadline is not None and deadline >= now + \
+                self.cost_model.batch_seconds(batch.unit_cost, 1) + \
+                self.policy.slo_margin:
+            # arm the SLO rule only with deadlines that an immediate
+            # singleton flush could still meet: a hopeless member cannot
+            # be saved by flushing early, and letting it force singleton
+            # batches would starve the amortization everyone behind it
+            # needs (the planner's max-throughput mode relies on this)
             if batch.deadline_min is None or deadline < batch.deadline_min:
                 batch.deadline_min = deadline
         if fresh and self.policy.idle_flush and \
@@ -127,19 +163,43 @@ class StageBatcher:
                     batch.deadline_min:
                 self.slo_flushes += 1
                 self._flush(batch)
-        if not batch.closed and len(batch.keys) >= self.policy.max_batch:
+        if not batch.closed and len(batch.keys) >= batch.cap:
             self._flush(batch)
         if fresh and not batch.closed:
-            # schedule the window flush only for batches that actually
-            # stay open — idle-flushed ones never touch the event heap
-            self.sim.at(batch.flush_at, self._window_flush, batch)
+            # a batch flushed at enrollment (idle/SLO/size) schedules no
+            # timer at all, and an undischarged timer left by an earlier
+            # early-flushed batch on this key is reused (it rolls forward
+            # on fire) — so flushed batches never leave dead timer events
+            # inflating the DES heap.  ``_timer_at`` tracks the EARLIEST
+            # live timer per key; a new entry is pushed only when this
+            # batch's window ends before it (possible under the adaptive
+            # planner's per-batch windows), and the superseded later
+            # entry becomes a stale no-op on pop.
+            pending = self._timer_at.get(bkey)
+            if pending is None or batch.flush_at < pending:
+                self._timer_at[bkey] = batch.flush_at
+                self.timers_scheduled += 1
+                self.sim.at(batch.flush_at, self._window_flush, bkey)
         yield WaitFor(batch.future)
 
     # -- flushing -----------------------------------------------------------
 
-    def _window_flush(self, batch: _OpenBatch) -> None:
-        if not batch.closed:
+    def _window_flush(self, bkey: Tuple[str, str]) -> None:
+        if self._timer_at.get(bkey) != self.sim.now:
+            return                    # superseded by an earlier/rolled timer
+        del self._timer_at[bkey]
+        batch = self._open.get(bkey)
+        if batch is None:
+            return
+        if batch.flush_at <= self.sim.now:
             self._flush(batch)
+        else:
+            # a newer batch opened on this key after our batch flushed
+            # early: roll the timer forward instead of letting the newer
+            # batch push its own heap entry
+            self._timer_at[bkey] = batch.flush_at
+            self.timer_rolls += 1
+            self.sim.at(batch.flush_at, self._window_flush, bkey)
 
     def _flush(self, batch: _OpenBatch) -> None:
         batch.closed = True
@@ -147,7 +207,7 @@ class StageBatcher:
         n = len(batch.keys)
         seconds = self.cost_model.batch_seconds(batch.unit_cost, n)
         binding = self.rt.bindings[batch.stage]
-        shard = self._shard_of(batch)
+        shard = self._shard_for(batch.keys[0], batch.slot)
         node = self.rt.scheduler.pick_batch(
             shard, batch.keys, self.rt.nodes, binding.pool_nodes,
             resource=batch.resource)
@@ -161,14 +221,29 @@ class StageBatcher:
 
     # -- helpers ------------------------------------------------------------
 
-    def _shard_of(self, batch: _OpenBatch):
-        pool = self.rt.store.pool_for(batch.keys[0])
-        return pool.shards[batch.slot]
+    def _shard_for(self, key: str, slot: str):
+        return self.rt.store.pool_for(key).shards[slot]
+
+    def _slot_pending(self, key: str, slot: str, resource: str) -> float:
+        """Backlogged compute seconds per lane on the slot's least-backed-up
+        member — the load signal the planner's window tracks (the same
+        "prefer free lanes" member ``pick_batch`` will dispatch to)."""
+        nodes = self.rt.nodes
+        best = None
+        for name in self._shard_for(key, slot).nodes:
+            node = nodes[name]
+            if not node.up:
+                continue
+            pending = (node.pending[resource]
+                       / (node.capacity.get(resource, 1) or 1))
+            if best is None or pending < best:
+                best = pending
+        return 0.0 if best is None else best
 
     def _resource_idle(self, batch: _OpenBatch) -> bool:
         """A free lane with an empty queue on any of the slot's nodes?"""
         nodes = self.rt.nodes
-        for name in self._shard_of(batch).nodes:
+        for name in self._shard_for(batch.keys[0], batch.slot).nodes:
             node = nodes[name]
             if not node.up:
                 continue
@@ -187,8 +262,11 @@ class StageBatcher:
             "batched_tasks": self.enrolled,
             "slo_flushes": self.slo_flushes,
             "idle_flushes": self.idle_flushes,
+            "window_timers": self.timers_scheduled,
         }
         if sizes:
             out["mean_batch"] = sum(sizes) / len(sizes)
             out["max_batch"] = max(sizes)
+        if self.planner is not None:
+            out.update(self.planner.summary())
         return out

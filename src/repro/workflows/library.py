@@ -109,16 +109,18 @@ def mode_kwargs(mode: str) -> dict:
     groups, hash-of-label), ``atomic`` (instance groups + load-aware gang
     pinning); suffixes compose: ``+mig`` adds the migration driver on
     migratable pools, ``+batch`` turns on cross-instance stage batching
-    (``atomic+batch`` is the headline fig8 configuration).  One definition
-    so benchmarks, examples, and tests sweep the exact same
-    configurations.
+    with the static window (the fig8 sweep axis), ``+abatch`` turns on
+    batching driven by the adaptive planner (the fig9 headline — no
+    window knob at all).  One definition so benchmarks, examples, and
+    tests sweep the exact same configurations.
     """
     base, *suffixes = mode.split("+")
     if base not in ("keyhash", "affinity", "atomic") or \
-            any(s not in ("mig", "batch") for s in suffixes):
+            any(s not in ("mig", "batch", "abatch") for s in suffixes):
         raise ValueError(f"unknown workflow placement mode {mode!r}")
     return dict(grouped=base != "keyhash",
                 placement="load_aware" if base == "atomic" else "hash",
                 gang_pin=base == "atomic",
                 migrate_every=0.2 if "mig" in suffixes else None,
-                batching="batch" in suffixes)
+                batching="batch" in suffixes,
+                adaptive_batching="abatch" in suffixes)

@@ -1,0 +1,207 @@
+"""Adaptive batch planning: self-tuning windows from streaming load signals.
+
+PR 3's ``StageBatcher`` made cross-instance batching *possible*; its
+window and size cap were still static per run, and fig8 showed the best
+window differs per workflow shape and arrival rate — exactly the tuning
+burden InferLine (1812.01776) argues a planner should absorb, and that
+Vortex (2511.02062) absorbs by adapting batch formation to queue
+pressure.  ``BatchPlanner`` closes it with three streaming signals, all
+O(1) to read:
+
+  * **arrival rate** — an EWMA of per-(stage, slot) inter-arrival gaps,
+    fed by every enrollment (how long does one more member cost?);
+  * **service percentiles** — the tracker's per-stage
+    :class:`repro.runtime.stats.StageStats` sketches (what does the rest
+    of the workflow still cost after this stage?);
+  * **backlog** — the slot nodes' admitted-but-unfinished compute
+    seconds per lane (``Node.pending``, maintained O(1) by the compute
+    handlers): is there anything to amortize against at all, and for how
+    long is waiting free?
+
+On every batch open it picks the largest batch whose expected formation
+wait plus amortized service (``BatchCostModel.largest_within``) fits the
+enrolling member's deadline headroom net of the downstream critical path,
+then sizes the window to the backlog: holding a batch open only costs
+latency once a lane could actually have run it, so the window tracks the
+slot's pending compute seconds (scaled by ``pending_gain``) — near zero
+on an unloaded slot (the idle rule flushes anyway), growing exactly when
+contention makes formation free.  No per-rate knobs: the same policy
+instance matches or beats the best hand-picked static window at every
+arrival rate of the fig8 sweep (``benchmarks/fig9_adaptive.py`` records
+that).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.runtime.batching import BatchCostModel
+from repro.runtime.stats import StageStats
+
+from .graph import Stage, WorkflowGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveBatchPolicy:
+    """Bounds and gains for the planner (NOT per-rate tuning knobs —
+    one instance is meant to serve every load level).
+
+    ``min_window``/``max_window`` clamp the planned formation window;
+    ``gap_alpha`` is the EWMA weight on new inter-arrival gaps;
+    ``headroom_safety`` is the fraction of remaining deadline headroom the
+    planner lets formation + service spend (the rest absorbs estimation
+    error); ``window_slack`` over-provisions the window past the expected
+    fill time so the size cap — not the timer — usually flushes;
+    ``min_samples`` gates trusting a stage's span sketch over the static
+    fallback; ``tail_quantile`` is the percentile used for the downstream
+    critical path.
+    """
+    min_window: float = 0.0005
+    max_window: float = 0.064
+    slo_margin: float = 0.0
+    gap_alpha: float = 0.25
+    headroom_safety: float = 0.85
+    gap_gain: float = 0.0          # window per observed arrival gap
+    pending_gain: float = 0.75     # window per second of backlogged compute
+    min_samples: int = 8
+    tail_quantile: float = 0.95
+    refresh_every: int = 64        # plans between tail-estimate refreshes
+
+
+class BatchPlanner:
+    """Per-(stage, slot) controller retuning window/max_batch continuously.
+
+    The :class:`~repro.workflows.batching.StageBatcher` calls
+    :meth:`note_arrival` on every enrollment and :meth:`plan` on every
+    batch open; both are O(1) (the downstream-tail estimate is memoized
+    and refreshed every ``refresh_every`` plans).
+    """
+
+    def __init__(self, graph: WorkflowGraph, tracker,
+                 cost_model: Optional[BatchCostModel] = None,
+                 policy: Optional[AdaptiveBatchPolicy] = None):
+        self.graph = graph
+        self.tracker = tracker                 # InstanceTracker
+        self.cost_model = cost_model or BatchCostModel()
+        self.policy = policy or AdaptiveBatchPolicy()
+        self._stages: Dict[str, Stage] = {s.name: s for s in graph.stages}
+        # emit->trigger successor map (for the downstream critical path)
+        self._succ: Dict[str, Tuple[str, ...]] = {
+            s.name: tuple(sorted({d.name for e in s.emits
+                                  for d in graph.stages_on(e.pool)}))
+            for s in graph.stages}
+        self._gap: Dict[Tuple[str, str], float] = {}     # EWMA arrival gap
+        self._last: Dict[Tuple[str, str], float] = {}
+        self._tail: Dict[str, float] = {}                # memoized tails
+        self._plans_since_refresh = 0
+        # realized-planning stats (summary() reports them)
+        self.plans = 0
+        self.throughput_mode = 0      # budget exhausted -> max batch
+        self.windows = StageStats()   # distribution of planned windows
+        self.caps = StageStats()      # distribution of planned size caps
+
+    # -- signal feeds --------------------------------------------------------
+
+    def note_arrival(self, stage_name: str, slot: str, now: float) -> None:
+        """EWMA the inter-arrival gap of (stage, slot) — every enrollment."""
+        key = (stage_name, slot)
+        last = self._last.get(key)
+        self._last[key] = now
+        if last is None:
+            return
+        gap = now - last
+        prev = self._gap.get(key)
+        a = self.policy.gap_alpha
+        self._gap[key] = gap if prev is None else (1 - a) * prev + a * gap
+
+    # -- estimates -----------------------------------------------------------
+
+    def span_tail(self, stage_name: str) -> float:
+        """Tail (``tail_quantile``) span of one stage — sketch if warm,
+        static fallback (2x declared cost covers transfer/queue slack)."""
+        st: Optional[StageStats] = \
+            self.tracker.stage_stats.get(stage_name)
+        if st is not None and st.count >= self.policy.min_samples:
+            return st.quantile(self.policy.tail_quantile)
+        return 2.0 * self._stages[stage_name].cost
+
+    def tail_after(self, stage_name: str) -> float:
+        """Critical-path tail span strictly downstream of ``stage_name``
+        (what the instance still pays after this stage completes)."""
+        cached = self._tail.get(stage_name)
+        if cached is not None:
+            return cached
+        tail = max((self.span_tail(d) + self.tail_after(d)
+                    for d in self._succ[stage_name]), default=0.0)
+        self._tail[stage_name] = tail
+        return tail
+
+    # -- the decision --------------------------------------------------------
+
+    def plan(self, stage: Stage, slot: str, now: float,
+             deadline: Optional[float],
+             pending: float = 0.0) -> Tuple[float, int]:
+        """(window_seconds, max_batch) for a batch opening now.
+
+        ``deadline`` is the enrolling member's absolute deadline (None =
+        unconstrained); ``pending`` the seconds of admitted-but-unfinished
+        compute per lane on the slot's least-backed-up member — how long
+        the fresh batch would wait for a lane even if it flushed right
+        now.
+        """
+        pol = self.policy
+        self.plans += 1
+        self._plans_since_refresh += 1
+        if self._plans_since_refresh >= pol.refresh_every:
+            self._tail.clear()                 # re-read the span sketches
+            self._plans_since_refresh = 0
+        cm = self.cost_model
+        unit = stage.cost
+        gap = self._gap.get((stage.name, slot))
+
+        budget = float("inf")
+        if deadline is not None:
+            budget = (deadline - now - self.tail_after(stage.name)
+                      - pol.slo_margin) * pol.headroom_safety
+        if budget <= cm.batch_seconds(unit, 1):
+            # Deadline headroom is already gone (overload ate it upstream):
+            # protecting this member is impossible, so maximize throughput
+            # for everyone behind it — the regime where batching pays most.
+            self.throughput_mode += 1
+            cap = cm.max_batch
+        elif gap is None or gap <= 0.0:
+            # No arrival-rate signal yet: admit the full cap and let the
+            # SLO/size/idle rules govern (first batches of a run).
+            cap = cm.max_batch
+        else:
+            cap = cm.largest_within(unit, budget, wait_per_member=gap)
+        # The window is NOT "time to fill the cap": holding a batch open
+        # costs its members latency, and that wait is only free while the
+        # slot's lanes are busy with earlier work.  Two signals size it:
+        # the observed arrival gap (long enough to catch the next firing)
+        # and the backlogged compute seconds per lane (formation time the
+        # batch could not have started in anyway).  Never longer than the
+        # headroom left after the planned batch's own service time.
+        if cap <= 1 or gap is None or gap <= 0.0:
+            window = pol.min_window
+        else:
+            window = max(pol.gap_gain * gap, pol.pending_gain * pending)
+            if budget != float("inf"):
+                window = min(window, max(
+                    budget - cm.batch_seconds(unit, cap), pol.min_window))
+        window = min(max(window, pol.min_window), pol.max_window)
+        self.windows.observe(window)
+        self.caps.observe(float(cap))
+        return window, cap
+
+    # -- reporting -----------------------------------------------------------
+
+    def summary(self) -> Dict[str, float]:
+        out: Dict[str, float] = {
+            "plans": self.plans,
+            "throughput_mode_plans": self.throughput_mode,
+        }
+        if self.plans:
+            out["planned_window_p50"] = self.windows.quantile(0.5)
+            out["planned_cap_p50"] = self.caps.quantile(0.5)
+        return out

@@ -43,10 +43,11 @@ from repro.core import (CascadeStore, HashPlacement, InstanceAffinity,
 from repro.core.placement import PlacementPolicy
 from repro.runtime import (CLUSTER_NET, Compute, Get, NetProfile, Put,
                            ReplicaScheduler, Runtime, Scheduler,
-                           ShardLocalScheduler)
+                           ShardLocalScheduler, StageStats)
 from repro.runtime.batching import BatchCostModel
 from .batching import BatchPolicy, StageBatcher
 from .graph import INSTANCE, Stage, WorkflowGraph
+from .planner import AdaptiveBatchPolicy, BatchPlanner
 
 POLICIES = {"hash": HashPlacement,
             "load_aware": LoadAwarePlacement,
@@ -85,13 +86,33 @@ class InstanceRecord:
 
 
 class InstanceTracker:
-    """Fan-in counters + end-to-end / per-stage latency accounting."""
+    """Fan-in counters + end-to-end / per-stage latency accounting.
 
-    def __init__(self, graph: WorkflowGraph):
+    Per-stage spans land in bounded :class:`repro.runtime.StageStats`
+    sketches (O(1) update, fixed memory) instead of per-sample lists, so
+    the adaptive batch planner can read p50/p95/p99 on every flush
+    decision at million-event scale.  End-to-end latency percentiles stay
+    numpy-exact over the per-instance records by default; with
+    ``evict_completed=True`` a finished instance is folded into streaming
+    aggregates and its record dropped the moment every stage has fired —
+    records then hold only in-flight instances and tracker memory is
+    bounded by concurrency, not horizon (the fig9 long-horizon mode).
+    """
+
+    def __init__(self, graph: WorkflowGraph, evict_completed: bool = False):
         self.graph = graph
+        self.evict_completed = evict_completed
         self.records: Dict[str, InstanceRecord] = {}
-        self.stage_spans: Dict[str, List[float]] = defaultdict(list)
+        self.stage_stats: Dict[str, StageStats] = defaultdict(StageStats)
         self._sinks = {s.name: s.firings for s in graph.sink_stages}
+        self._expected_done = {s.name: s.firings for s in graph.stages}
+        # streaming aggregates over completed instances (the only record
+        # of evicted ones; maintained regardless so both modes agree)
+        self.e2e = StageStats()
+        self.admitted = 0
+        self.retired = 0
+        self.completed_with_deadline = 0
+        self.completed_deadline_misses = 0
 
     def admit(self, instance: str, t: float,
               deadline: Optional[float] = None) -> InstanceRecord:
@@ -100,6 +121,7 @@ class InstanceTracker:
             instance=instance, t_submit=t,
             deadline=(t + deadline) if deadline is not None else None)
         self.records[instance] = rec
+        self.admitted += 1
         return rec
 
     def arrive(self, instance: str, stage: str, key: str,
@@ -120,43 +142,77 @@ class InstanceTracker:
                    t1: float) -> None:
         rec = self.records[instance]
         rec.done[stage] += 1
-        self.stage_spans[stage].append(t1 - t0)
+        self.stage_stats[stage].observe(t1 - t0)
         if rec.t_complete is None and all(
                 rec.done.get(s, 0) >= n for s, n in self._sinks.items()):
             rec.t_complete = t1
+            self.e2e.observe(t1 - rec.t_submit)
+            if rec.deadline is not None:
+                self.completed_with_deadline += 1
+                if t1 > rec.deadline:
+                    self.completed_deadline_misses += 1
+        # retire on the event that makes the record final — which may be
+        # a side-branch firing AFTER the sinks completed, so re-check on
+        # every stage_done once complete, not just at completion
+        if self.evict_completed and rec.t_complete is not None and \
+                self._fully_done(rec):
+            self.records.pop(instance)
+            self.retired += 1
+
+    def _fully_done(self, rec: InstanceRecord) -> bool:
+        """Every stage fired its expected per-instance count — no further
+        event can touch this record, so it is safe to retire."""
+        done = rec.done
+        return all(done.get(s, 0) >= n
+                   for s, n in self._expected_done.items())
 
     # -- results -----------------------------------------------------------
 
     def latencies(self) -> List[float]:
+        """Latencies of completed instances still retained (all of them
+        unless ``evict_completed`` retired some)."""
         return [r.latency for r in self.records.values()
                 if r.latency is not None]
 
     def summary(self) -> Dict[str, Any]:
         import numpy as np
-        lats = self.latencies()
         out: Dict[str, Any] = {
-            "n_submitted": len(self.records),
-            "n": len(lats),
+            "n_submitted": self.admitted,
+            "n": self.e2e.count,
         }
-        if lats:
-            arr = np.array(lats)
-            out.update(median=float(np.median(arr)),
-                       p75=float(np.percentile(arr, 75)),
-                       p95=float(np.percentile(arr, 95)),
-                       p99=float(np.percentile(arr, 99)),
-                       mean=float(arr.mean()))
-        with_deadline = [r for r in self.records.values()
-                         if r.deadline is not None]
+        if self.retired:
+            # long-horizon mode: per-sample history is gone by design —
+            # report the streaming aggregates (sketch-accurate)
+            if self.e2e.count:
+                out.update(median=self.e2e.quantile(0.5),
+                           p75=self.e2e.quantile(0.75),
+                           p95=self.e2e.quantile(0.95),
+                           p99=self.e2e.quantile(0.99),
+                           mean=self.e2e.mean)
+        else:
+            lats = self.latencies()
+            if lats:
+                arr = np.array(lats)
+                out.update(median=float(np.median(arr)),
+                           p75=float(np.percentile(arr, 75)),
+                           p95=float(np.percentile(arr, 95)),
+                           p99=float(np.percentile(arr, 99)),
+                           mean=float(arr.mean()))
+        # deadline accounting: completed misses are streamed; instances
+        # admitted with a deadline but never completed count as misses
+        open_deadline = sum(1 for r in self.records.values()
+                            if r.deadline is not None
+                            and r.t_complete is None)
+        with_deadline = self.completed_with_deadline + open_deadline
         if with_deadline:
-            misses = sum(1 for r in with_deadline
-                         if r.missed_deadline or r.t_complete is None)
+            misses = self.completed_deadline_misses + open_deadline
             out["slo_misses"] = misses
-            out["slo_miss_rate"] = misses / len(with_deadline)
+            out["slo_miss_rate"] = misses / with_deadline
         out["stages"] = {
-            s: {"n": len(v),
-                "median": float(np.median(v)),
-                "p99": float(np.percentile(v, 99))}
-            for s, v in self.stage_spans.items() if v}
+            s: {"n": st.count,
+                "median": st.quantile(0.5),
+                "p99": st.quantile(0.99)}
+            for s, st in self.stage_stats.items() if st.count}
         return out
 
 
@@ -185,9 +241,14 @@ class WorkflowRuntime:
                  unpin_on_complete: bool = False,
                  batching: bool = False,
                  batch_policy: Optional[BatchPolicy] = None,
-                 cost_model: Optional[BatchCostModel] = None):
+                 cost_model: Optional[BatchCostModel] = None,
+                 adaptive_batching: bool = False,
+                 adaptive_policy: Optional[AdaptiveBatchPolicy] = None,
+                 evict_completed: bool = False,
+                 log_tasks: bool = True):
         if not graph._validated:
             graph.validate()
+        batching = batching or adaptive_batching
         assert not (gang_pin and not grouped), \
             "gang_pin needs instance affinity (grouped=True)"
         assert not (batching and not graph.instance_tracking), \
@@ -198,7 +259,8 @@ class WorkflowRuntime:
         self.read_replicas = read_replicas
         self.gang_pin = gang_pin
         self.unpin_on_complete = unpin_on_complete
-        self.tracker = InstanceTracker(graph)
+        self.tracker = InstanceTracker(graph,
+                                       evict_completed=evict_completed)
 
         nodes: List[str] = []
         resources: Dict[str, Dict[str, int]] = {}
@@ -244,11 +306,22 @@ class WorkflowRuntime:
             scheduler = (ReplicaScheduler(store) if read_replicas > 1
                          else ShardLocalScheduler())
         self.rt = Runtime(store, resources, net=net, scheduler=scheduler,
-                          seed=seed)
+                          seed=seed, log_tasks=log_tasks)
         self.store = store
-        self.batcher: Optional[StageBatcher] = (
-            StageBatcher(self.rt, policy=batch_policy,
-                         cost_model=cost_model) if batching else None)
+        self.planner: Optional[BatchPlanner] = None
+        self.batcher: Optional[StageBatcher] = None
+        if batching:
+            batch_policy = batch_policy or BatchPolicy()
+            # one cost model instance prices planning AND execution
+            cost_model = cost_model or BatchCostModel(
+                max_batch=batch_policy.max_batch)
+            if adaptive_batching:
+                self.planner = BatchPlanner(graph, self.tracker,
+                                            cost_model=cost_model,
+                                            policy=adaptive_policy)
+            self.batcher = StageBatcher(self.rt, policy=batch_policy,
+                                        cost_model=cost_model,
+                                        planner=self.planner)
         if migrate_every is not None:
             for pool in graph.pools:
                 if pool.migratable:

@@ -1,0 +1,418 @@
+"""Adaptive batch planner + streaming metrics hot path.
+
+Covers the StageStats / P2Quantile sketches (accuracy vs exact
+np.percentile, bounded memory, order-invariance), the InstanceTracker's
+evict-completed long-horizon mode, the BatchPlanner's decisions, the
+window-timer coalescing in StageBatcher, and the end-to-end guarantee the
+fig9 benchmark records: one adaptive policy, no per-rate knobs, never
+worse than the hand-tuned static window.
+"""
+import numpy as np
+import pytest
+
+from repro.runtime import Node, P2Quantile, StageStats, node_load
+from repro.runtime.batching import BatchCostModel
+from repro.workflows import (AdaptiveBatchPolicy, BatchPlanner, BatchPolicy,
+                             Emit, WorkflowGraph, WorkflowRuntime,
+                             mode_kwargs, preload_index, rag_workflow)
+
+RES = {"gpu": 1, "cpu": 2, "nic": 2}
+
+
+# -- StageStats: the bounded quantile sketch ----------------------------------
+
+def test_stage_stats_exact_inside_warmup_buffer():
+    rng = np.random.default_rng(1)
+    xs = rng.lognormal(-3.0, 1.0, 400)       # < exact_cap=512
+    st = StageStats()
+    for x in xs:
+        st.observe(float(x))
+    assert st.exact
+    for q in (0.5, 0.75, 0.95, 0.99):
+        assert st.quantile(q) == pytest.approx(
+            float(np.percentile(xs, q * 100)), rel=1e-9)
+    assert st.mean == pytest.approx(float(xs.mean()))
+    assert st.min == float(xs.min()) and st.max == float(xs.max())
+
+
+def test_stage_stats_property_within_5pct_of_numpy():
+    """Acceptance property: sketch p50/p95/p99 within 5% of exact
+    np.percentile on the same samples, across distribution families,
+    sizes spanning the exact->sketch graduation, and stream orders."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st_
+
+    @given(st_.sampled_from(["uniform", "exponential", "lognormal"]),
+           st_.integers(min_value=10, max_value=4000),
+           st_.sampled_from(["natural", "sorted", "reversed"]),
+           st_.integers(min_value=0, max_value=2 ** 31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def prop(family, n, order, seed):
+        rng = np.random.default_rng(seed)
+        xs = {"uniform": lambda: rng.uniform(1e-4, 1.0, n),
+              "exponential": lambda: rng.exponential(0.05, n),
+              "lognormal": lambda: rng.lognormal(-2.0, 1.0, n)}[family]()
+        if order == "sorted":
+            xs = np.sort(xs)
+        elif order == "reversed":
+            xs = np.sort(xs)[::-1]
+        st = StageStats()
+        for x in xs:
+            st.observe(float(x))
+        for q in (0.5, 0.95, 0.99):
+            est = st.quantile(q)
+            if st.exact:        # inside the warm-up buffer: numpy-equal
+                exact = float(np.percentile(xs, q * 100))
+                assert est == pytest.approx(exact, rel=1e-9), \
+                    (family, n, order, q)
+            else:
+                # sketch regime: within 5% of the exact percentile,
+                # bracketed by the adjacent order statistics (numpy's
+                # linear interpolation picks a point between them; the
+                # sketch returns the rank-correct sample's bin)
+                lo = float(np.percentile(xs, q * 100, method="lower"))
+                hi = float(np.percentile(xs, q * 100, method="higher"))
+                assert 0.95 * lo - 1e-12 <= est <= 1.05 * hi + 1e-12, \
+                    (family, n, order, q, lo, est, hi)
+
+    prop()
+
+
+def test_stage_stats_order_invariant_beyond_buffer():
+    """The log-binned estimator sees a multiset, not a sequence."""
+    rng = np.random.default_rng(3)
+    xs = rng.exponential(0.02, 20_000)
+    vals = {}
+    for order, stream in (("shuffled", xs),
+                          ("sorted", np.sort(xs)),
+                          ("reversed", np.sort(xs)[::-1])):
+        st = StageStats()
+        for x in stream:
+            st.observe(float(x))
+        vals[order] = [st.quantile(q) for q in (0.5, 0.95, 0.99)]
+    assert vals["shuffled"] == vals["sorted"] == vals["reversed"]
+
+
+def test_stage_stats_gap_median_is_rank_correct():
+    """Across a density gap np.percentile interpolates a value that is
+    near NO sample; the sketch returns the rank-correct order statistic
+    instead — pin it to the adjacent exact order statistics."""
+    rng = np.random.default_rng(4)
+    xs = np.concatenate([rng.normal(0.01, 0.002, 10_000),
+                         rng.normal(0.1, 0.01, 10_000)])
+    st = StageStats()
+    for x in xs:
+        st.observe(float(x))
+    est = st.quantile(0.5)
+    lo = float(np.percentile(xs, 50, method="lower"))
+    hi = float(np.percentile(xs, 50, method="higher"))
+    assert min(lo, est) / max(lo, est) > 0.95 or \
+        min(hi, est) / max(hi, est) > 0.95
+
+
+def test_stage_stats_memory_bounded_at_100k():
+    st = StageStats()
+    rng = np.random.default_rng(5)
+    for x in rng.exponential(0.01, 100_000):
+        st.observe(float(x))
+    n_buf, n_bins = st.footprint()
+    assert n_buf == 0                  # warm-up buffer freed on graduation
+    assert n_bins < 1000               # fixed bucket array, horizon-free
+    assert not st.exact and st.count == 100_000
+    assert st.quantile(0.99) > st.quantile(0.5) > 0.0
+    assert st.quantile(0.0) == st.min       # empty zero-bucket edge
+
+
+def test_stage_stats_zero_and_negative_observations():
+    st = StageStats()
+    for x in (0.0, -1e-9, 0.0, 2.0):
+        st.observe(x)
+    assert st.min == 0.0 and st.max == 2.0
+    assert st.quantile(0.25) == 0.0
+    assert st.quantile(1.0) == 2.0
+
+
+def test_p2_quantile_on_stationary_stream():
+    rng = np.random.default_rng(6)
+    xs = rng.lognormal(-3.0, 0.8, 50_000)
+    for q in (0.5, 0.95, 0.99):
+        sk = P2Quantile(q)
+        for x in xs:
+            sk.observe(float(x))
+        exact = float(np.percentile(xs, q * 100))
+        assert abs(sk.value() - exact) <= 0.05 * exact
+    assert len(sk._h) == 5             # five markers, nothing retained
+
+
+# -- InstanceTracker: long-horizon bounded memory -----------------------------
+
+def _chain_graph():
+    g = WorkflowGraph("chain")
+    g.add_tier("t", 2, dict(RES))
+    g.add_pool("/a", tier="t", shards=2)
+    g.add_pool("/b", tier="t", shards=2)
+    g.add_stage("s0", pool="/a", resource="gpu", cost=1e-3,
+                emits=[Emit("/b", fanout=1, size=64)], sink=True)
+    return g.validate()
+
+
+def test_tracker_evicts_completed_at_100k_instances():
+    """100k instances through the tracker: records stay bounded by
+    in-flight concurrency, per-stage stats bounded by the sketch."""
+    from repro.workflows import InstanceTracker
+    tr = InstanceTracker(_chain_graph(), evict_completed=True)
+    peak = 0
+    for i in range(100_000):
+        t = i * 1e-3
+        inst = f"i{i}"
+        tr.admit(inst, t, deadline=0.5)
+        tr.arrive(inst, "s0", f"/a/{inst}_event_0", t)
+        tr.fire(inst, "s0")
+        tr.stage_done(inst, "s0", t, t + 2e-3)
+        peak = max(peak, len(tr.records))
+    assert len(tr.records) == 0 and peak <= 1
+    assert tr.retired == 100_000 and tr.admitted == 100_000
+    s = tr.summary()
+    assert s["n"] == 100_000
+    assert s["p99"] == pytest.approx(2e-3, rel=0.05)
+    assert s["slo_miss_rate"] == 0.0
+    assert tr.stage_stats["s0"].footprint()[0] == 0     # sketch-only
+
+
+def test_evicting_and_retaining_trackers_agree():
+    """Same stream, evict on/off: identical completion counts and SLO
+    accounting, quantiles within the sketch tolerance."""
+    outs = []
+    for evict in (False, True):
+        g = _chain_graph()
+        wrt = WorkflowRuntime(g, **mode_kwargs("atomic"),
+                              evict_completed=evict)
+        for i in range(600):
+            wrt.submit(f"i{i}", at=0.001 + i * 5e-4, deadline=0.3)
+        wrt.run()
+        outs.append(wrt.summary())
+    keep, evicted = outs
+    assert keep["n"] == evicted["n"] == 600
+    assert keep.get("slo_misses", 0) == evicted.get("slo_misses", 0)
+    for k in ("median", "p99"):
+        assert evicted[k] == pytest.approx(keep[k], rel=0.05)
+
+
+# -- BatchPlanner decisions ---------------------------------------------------
+
+def test_largest_within_monotone_and_bounded():
+    m = BatchCostModel(max_batch=16)
+    assert m.largest_within(0.01, budget=1e-6) == 1      # always >= 1
+    assert m.largest_within(0.01, budget=1e9) == 16
+    prev = 1
+    for budget in (0.02, 0.05, 0.1, 0.5):
+        n = m.largest_within(0.01, budget, wait_per_member=0.01)
+        assert n >= prev
+        prev = n
+
+
+def _planner(graph=None, **pol):
+    g = graph or rag_workflow(shards=2)
+    from repro.workflows import InstanceTracker
+    tr = InstanceTracker(g)
+    return BatchPlanner(g, tr, policy=AdaptiveBatchPolicy(**pol)), g
+
+
+def test_planner_gap_ewma_tracks_arrivals():
+    p, g = _planner()
+    for i in range(10):
+        p.note_arrival("generate", "s0", i * 0.010)
+    assert p._gap[("generate", "s0")] == pytest.approx(0.010)
+    p.note_arrival("generate", "s0", 0.090 + 0.040)
+    assert p._gap[("generate", "s0")] > 0.010     # EWMA moved toward 40ms
+
+
+def test_planner_window_tracks_pending_backlog():
+    p, g = _planner()
+    gen = next(s for s in g.stages if s.name == "generate")
+    for i in range(6):
+        p.note_arrival("generate", "s0", i * 0.010)
+    w_idle, _ = p.plan(gen, "s0", 0.06, deadline=None, pending=0.0)
+    w_busy, _ = p.plan(gen, "s0", 0.06, deadline=None, pending=0.040)
+    assert w_busy > w_idle
+    assert w_busy == pytest.approx(
+        0.040 * p.policy.pending_gain, rel=1e-6)
+
+
+def test_planner_throughput_mode_when_headroom_gone():
+    """A hopeless deadline must not shrink the batch — it flips the
+    planner into max-throughput mode for everyone behind."""
+    p, g = _planner()
+    gen = next(s for s in g.stages if s.name == "generate")
+    _, cap = p.plan(gen, "s0", now=1.0, deadline=1.001)   # < unit cost
+    assert cap == p.cost_model.max_batch
+    assert p.throughput_mode == 1
+
+
+def test_planner_cap_respects_deadline_budget():
+    p, g = _planner()
+    gen = next(s for s in g.stages if s.name == "generate")   # 30ms unit
+    for i in range(6):
+        p.note_arrival("generate", "s0", i * 0.020)
+    # generous headroom -> big cap; tight (but feasible) -> small cap
+    _, cap_loose = p.plan(gen, "s0", 0.1, deadline=10.0)
+    _, cap_tight = p.plan(gen, "s0", 0.1, deadline=0.1 + 0.055)
+    assert cap_loose > cap_tight >= 1
+
+
+def test_planner_window_clamped_to_policy_bounds():
+    p, g = _planner(min_window=0.001, max_window=0.010)
+    gen = next(s for s in g.stages if s.name == "generate")
+    for i in range(6):
+        p.note_arrival("generate", "s0", i * 0.010)
+    w, _ = p.plan(gen, "s0", 0.06, deadline=None, pending=10.0)
+    assert w == 0.010
+    w, _ = p.plan(gen, "s0", 0.06, deadline=None, pending=0.0)
+    assert w == 0.001
+
+
+def test_node_load_prefers_free_lanes_then_shallow_queues():
+    a = Node("a", {"gpu": 2})
+    b = Node("b", {"gpu": 1})
+    a.in_use["gpu"] = 1                     # one of two lanes busy
+    b.in_use["gpu"] = 1
+    assert node_load(a, "gpu") < node_load(b, "gpu")
+    b.queues["gpu"].append((0.0, lambda: None))
+    assert node_load(b, "gpu") == 2.0
+
+
+# -- StageBatcher window-timer coalescing -------------------------------------
+
+def _burst_runtime(max_batch, window, n=18, idle_flush=False):
+    g = rag_workflow(shards=2)
+    mk = dict(mode_kwargs("atomic"), batching=True,
+              batch_policy=BatchPolicy(window=window, max_batch=max_batch,
+                                       idle_flush=idle_flush))
+    wrt = WorkflowRuntime(g, **mk)
+    preload_index(wrt)
+    for i in range(n):
+        wrt.submit(f"req{i}", at=0.01 + i * 1e-4)
+    wrt.run()
+    return wrt
+
+
+def test_no_timer_for_batches_flushed_at_enrollment():
+    """max_batch=1: every batch closes by the size rule at its first
+    enrollment — the window timer must never be scheduled."""
+    wrt = _burst_runtime(max_batch=1, window=0.5)
+    b = wrt.batcher
+    assert b.n_batches == b.enrolled > 0
+    assert b.timers_scheduled == 0
+
+
+def test_one_pending_timer_per_batch_key():
+    """Size-flushed batches leave their timer to roll to the next open
+    batch on the key: far fewer timer events than batches."""
+    wrt = _burst_runtime(max_batch=3, window=1.0)
+    b = wrt.batcher
+    assert b.n_batches > 4
+    # one live timer per (stage, slot) at a time — the heap never holds
+    # a dead timer per flushed batch
+    n_keys = len(wrt.graph.stages) * 2          # stages x shard slots
+    assert b.timers_scheduled + b.timer_rolls <= n_keys * 2
+    assert b.timers_scheduled < b.n_batches
+    assert not b._timer_at                 # all discharged at drain
+
+
+def test_hopeless_deadline_does_not_arm_slo_flush():
+    """A member whose deadline cannot be met even by an immediate
+    singleton flush must not force singleton batches — max-throughput
+    mode batches it with everyone behind instead."""
+    g = rag_workflow(shards=1)
+    mk = dict(mode_kwargs("atomic"), batching=True,
+              batch_policy=BatchPolicy(window=0.050, max_batch=16,
+                                       idle_flush=False))
+    wrt = WorkflowRuntime(g, **mk)
+    preload_index(wrt)
+    # deadlines below even one unit of the cheapest stage (retrieve,
+    # 4ms): hopeless at every enrollment, so the SLO rule must stay
+    # unarmed and batches must still coalesce via the window/size rules
+    for i in range(8):
+        wrt.submit(f"req{i}", at=0.001 + i * 1e-3, deadline=0.002)
+    wrt.run()
+    s = wrt.summary()
+    assert s["slo_flushes"] == 0
+    assert s["mean_batch"] > 1.0
+
+
+def test_window_timer_still_flushes_open_batches():
+    """The coalesced timer must still fire the window rule itself."""
+    g = rag_workflow(shards=1)
+    mk = dict(mode_kwargs("atomic"), batching=True,
+              batch_policy=BatchPolicy(window=0.005, max_batch=64,
+                                       idle_flush=False))
+    wrt = WorkflowRuntime(g, **mk)
+    preload_index(wrt)
+    wrt.submit("only", at=0.01)
+    wrt.run()
+    assert wrt.summary()["n"] == 1         # completed via timer flushes
+    assert wrt.batcher.timers_scheduled >= 1
+
+
+# -- end to end: adaptive never loses to the tuned static window --------------
+
+def run_mode(mode, n=160, shards=4, rate=320.0, deadline=0.5, window=None):
+    g = rag_workflow(shards=shards)
+    kw = mode_kwargs(mode)
+    if window is not None and kw.get("batching"):
+        kw["batch_policy"] = BatchPolicy(window=window)
+    wrt = WorkflowRuntime(g, **kw)
+    preload_index(wrt)
+    for i in range(n):
+        wrt.submit(f"req{i}", at=0.05 + i / rate, deadline=deadline)
+    wrt.run()
+    return wrt
+
+
+def test_adaptive_is_accounting_transparent():
+    a = run_mode("atomic")
+    b = run_mode("atomic+abatch")
+    assert set(a.tracker.records) == set(b.tracker.records)
+    for inst, ra in a.tracker.records.items():
+        rb = b.tracker.records[inst]
+        assert ra.t_complete is not None and rb.t_complete is not None
+        assert dict(ra.arrivals) == dict(rb.arrivals), inst
+        assert dict(ra.fired) == dict(rb.fired), inst
+        assert dict(ra.done) == dict(rb.done), inst
+
+
+def test_adaptive_beats_or_matches_static_under_overload():
+    """The fig9 claim at test scale: adaptive p99 <= best static p99
+    across windows, same policy instance, no tuning."""
+    static = [run_mode("atomic+batch", window=w).summary()["p99"]
+              for w in (0.008, 0.016, 0.032)]
+    adaptive = run_mode("atomic+abatch").summary()
+    assert adaptive["p99"] <= min(static) * 1.001
+    assert adaptive["plans"] > 0
+
+
+def test_mode_kwargs_abatch_suffix():
+    mk = mode_kwargs("atomic+abatch")
+    assert mk["batching"] is False and mk["adaptive_batching"] is True
+    assert mode_kwargs("atomic+batch")["adaptive_batching"] is False
+    with pytest.raises(ValueError):
+        mode_kwargs("atomic+abatch+bogus")
+
+
+# -- benchmark regression deltas (run.py satellite) ---------------------------
+
+def test_bench_deltas_flags_only_regressions():
+    from benchmarks.common import bench_deltas
+    prior = {"rows": [
+        {"name": "x/a", "p99_ms": 100.0, "wall_s": 1.0},
+        {"name": "x/b", "p99_ms": 50.0},
+    ]}
+    fresh = [("x/a", 0.0, {"p99_ms": 120.0, "wall_s": 1.1}),   # +20% p99
+             ("x/b", 0.0, {"p99_ms": 50.0}),                   # unchanged
+             ("x/new", 0.0, {"p99_ms": 1.0})]                  # no prior
+    lines = bench_deltas("x", prior, fresh)
+    assert any("x/a p99_ms 100.0 -> 120.0" in ln for ln in lines)
+    assert not any("x/b" in ln for ln in lines)
+    assert not any("x/new" in ln for ln in lines)
+    assert "regressed" in lines[-1]
+    assert bench_deltas("x", None, fresh) == []

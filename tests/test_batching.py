@@ -49,6 +49,38 @@ def test_cost_model_monotone_in_n():
         prev = cur
 
 
+def test_cost_model_empty_batch_is_free():
+    m = BatchCostModel()
+    assert m.batch_seconds(0.030, 0) == 0.0
+    assert m.batch_seconds(0.030, -3) == 0.0
+    # step_seconds clamps to a unit step: an idle row still prices one
+    # full decode step (the serving engine's n=max(slots,1) contract)
+    assert m.step_seconds(0.030, 0) == pytest.approx(0.030)
+
+
+def test_cost_model_speedup_monotone_up_to_hw_cap():
+    """speedup(n) is nondecreasing on 1..max_batch (amortization only
+    helps), >= 1 everywhere, and dips — but never below 1 — right past
+    the cap where a second weight-stream starts."""
+    m = BatchCostModel(fixed=0.65, marginal=0.35, max_batch=16)
+    prev = 1.0
+    for n in range(1, m.max_batch + 1):
+        s = m.speedup(n)
+        assert s >= prev - 1e-12
+        prev = s
+    assert m.speedup(m.max_batch + 1) < m.speedup(m.max_batch)
+    for n in (17, 31, 32, 33, 100):
+        assert m.speedup(n) >= 1.0
+
+
+def test_cost_model_step_seconds_consistent_with_batch_seconds():
+    m = BatchCostModel()
+    for unit in (1e-4, 0.03, 2.0):
+        for n in (1, 2, 7, 16, 17, 40):
+            assert m.step_seconds(unit, n) * n == pytest.approx(
+                m.batch_seconds(unit, n))
+
+
 # -- sim primitives -----------------------------------------------------------
 
 def make_sim(n_nodes=2):
