@@ -4,12 +4,44 @@ Pools live on dedicated storage nodes (Blob/Cosmos stand-ins), compute runs
 on endpoint-instance nodes behind a load balancer, and the network is the
 AZURE profile (ms RTT + storage latency).  'grouped' reproduces the paper's
 manual per-video endpoints + modulo routing (§5.3-5.4), i.e. affinity
-grouping hand-rolled at the application layer."""
+grouping hand-rolled at the application layer.
+
+``azure/wf/*`` runs the fig7 WORKFLOW shapes on ``AZURE_NET`` (the
+ROADMAP's "Azure profile for workflows"): in the ms-RTT regime every
+scattered edge costs ~5 ms before a byte moves, so workflow-atomic
+placement's all-local edges dominate by an order of magnitude more margin
+than on the RDMA cluster profile — the paper's cloud argument carried
+over from the RCP app to the general workflow layer."""
 import time
 
 from .common import emit
 
 SCENES = ("little3", "hyang5", "gates3")
+
+# cloud-regime deadlines: the cluster-profile fig7 deadlines plus the
+# ms-scale store/RTT budget every stage edge pays on Azure
+WF_DEADLINES = {"rag": 0.60, "speech": 0.45}
+WF_SHARDS = 4
+WF_INSTANCES_PER_SHARD = 30
+WF_PER_SHARD_RATE = 12.0
+
+
+def run_workflow_azure(shape: str, mode: str, quick=True, seed: int = 0):
+    from repro.runtime import AZURE_NET
+    from repro.workflows import (WORKFLOW_SHAPES, WorkflowRuntime,
+                                 mode_kwargs, preload_index)
+    graph = WORKFLOW_SHAPES[shape](shards=WF_SHARDS)
+    wrt = WorkflowRuntime(graph, seed=seed, net=AZURE_NET,
+                          **mode_kwargs(mode))
+    if shape == "rag":
+        preload_index(wrt)
+    n = WF_INSTANCES_PER_SHARD * WF_SHARDS * (1 if quick else 4)
+    rate = WF_PER_SHARD_RATE * WF_SHARDS
+    for i in range(n):
+        wrt.submit(f"req{i}", at=0.05 + i / rate,
+                   deadline=WF_DEADLINES[shape])
+    wrt.run()
+    return wrt.summary()
 
 
 def _build(grouped, n_mot, n_pred, n_cd, frames, seed=0, net=None):
@@ -69,6 +101,18 @@ def run(quick=True):
                      {"p95_ms": round(s["p95"] * 1e3, 1),
                       "remote_gets": s["remote_gets"],
                       "bytes_remote_MB": round(s["bytes_remote"] / 1e6, 1)}))
+    # fig7 workflow shapes in the ms-RTT regime (see module docstring)
+    for shape in ("rag", "speech"):
+        p99 = {}
+        for mode in ("keyhash", "atomic"):
+            s = run_workflow_azure(shape, mode, quick=quick)
+            p99[mode] = s["p99"]
+            rows.append((f"azure/wf/{shape}/{mode}", s["median"] * 1e6,
+                         {"p99_ms": round(s["p99"] * 1e3, 1),
+                          "remote_gets": s["remote_gets"],
+                          "slo_miss": round(s.get("slo_miss_rate", 0.0), 3),
+                          "n": s["n"]}))
+        assert p99["atomic"] <= p99["keyhash"], (shape, p99)
     return rows
 
 

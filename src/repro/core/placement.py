@@ -84,6 +84,16 @@ class LoadAwarePlacement(PlacementPolicy):
     def __init__(self):
         self.assignments: Dict[str, str] = {}
         self.load: Dict[str, float] = defaultdict(float)
+        # shard -> throughput weight (heterogeneous tiers): ranking divides
+        # accumulated load by it, so a 2x-faster backend binds ~2x the
+        # groups before looking as "full" as a reference shard.  Shards
+        # keep the default 1.0 on homogeneous clusters, which makes the
+        # ranking byte-identical to the unweighted one.
+        self.capacity: Dict[str, float] = {}
+
+    def set_capacity(self, shard: str, weight: float) -> None:
+        assert weight > 0, (shard, weight)
+        self.capacity[shard] = weight
 
     def place(self, label: str, shards: Sequence[str]) -> str:
         shard = self.assignments.get(label)
@@ -92,8 +102,10 @@ class LoadAwarePlacement(PlacementPolicy):
             # shards in the same order (e.g. /frames and /states over the
             # same nodes) then bind identical labels to identical slots, so
             # cross-pool collocation survives the switch away from hashing
+            cap = self.capacity
             i = min(range(len(shards)),
-                    key=lambda j: (self.load[shards[j]], j))
+                    key=lambda j: (self.load[shards[j]]
+                                   / cap.get(shards[j], 1.0), j))
             shard = shards[i]
             self.assignments[label] = shard
             self.load[shard] += self.REQUEST_COST
@@ -101,6 +113,19 @@ class LoadAwarePlacement(PlacementPolicy):
 
     def record_load(self, shard: str, nbytes: int) -> None:
         self.load[shard] += nbytes
+
+    def forget(self, label: str) -> None:
+        """Drop a group's binding so its next placement re-ranks shards
+        (admission deferral: a retry must see capacity added since the
+        first attempt).  The group's small REQUEST_COST charge stays —
+        repeated retries keep nudging later bindings off busy shards."""
+        self.assignments.pop(label, None)
+
+    def retire_shard(self, shard: str) -> None:
+        """Drop a removed shard's accumulated load so a later scale-out
+        reusing the slot NAME starts from zero (its former bytes are
+        re-credited to wherever the data migrated)."""
+        self.load.pop(shard, None)
 
     def rebind(self, label: str, shard: str, nbytes: int = 0) -> None:
         """Move a group's binding (migration): transfer its load charge."""
@@ -150,6 +175,21 @@ class ReplicatedPlacement(PlacementPolicy):
         rb = getattr(self.inner, "rebind", None)
         if rb is not None:
             rb(label, shard, nbytes)
+
+    def set_capacity(self, shard: str, weight: float) -> None:
+        sc = getattr(self.inner, "set_capacity", None)
+        if sc is not None:
+            sc(shard, weight)
+
+    def forget(self, label: str) -> None:
+        fg = getattr(self.inner, "forget", None)
+        if fg is not None:
+            fg(label)
+
+    def retire_shard(self, shard: str) -> None:
+        rs = getattr(self.inner, "retire_shard", None)
+        if rs is not None:
+            rs(shard)
 
     def name(self) -> str:
         return f"replicated({self.inner.name()},r={self.n_replicas})"
@@ -237,6 +277,13 @@ class PlacementEngine:
         if rec is not None:
             rec(shard, nbytes)
 
+    def set_capacity(self, shard: str, weight: float) -> None:
+        """Tier-aware throughput weight for capacity-normalized policies
+        (no-op for pure-hash policies, which ignore load entirely)."""
+        sc = getattr(self.policy, "set_capacity", None)
+        if sc is not None:
+            sc(shard, weight)
+
     def pin(self, label: str, shard: str, nbytes: int = 0) -> None:
         """Override a group's home (installed by GroupMigrator)."""
         assert shard in self._shards, (shard, self._shards)
@@ -252,6 +299,15 @@ class PlacementEngine:
         self._home_cache.pop(label, None)
         self._replica_cache.pop(label, None)
 
+    def forget(self, label: str) -> None:
+        """Unpin AND drop any sticky policy binding for ``label`` — the
+        next ``home_of`` re-runs placement from scratch (used when an
+        admission attempt is rolled back)."""
+        self.unpin(label)
+        fg = getattr(self.policy, "forget", None)
+        if fg is not None:
+            fg(label)
+
     # -- elasticity ---------------------------------------------------------
 
     def add_shard(self, shard: str) -> None:
@@ -264,6 +320,9 @@ class PlacementEngine:
         self._shards.remove(shard)
         self._home_cache.clear()
         self._replica_cache.clear()
+        rs = getattr(self.policy, "retire_shard", None)
+        if rs is not None:
+            rs(shard)
 
     def moved_labels(self, labels: Sequence[str],
                      new_shards: Sequence[str]) -> Dict[str, str]:

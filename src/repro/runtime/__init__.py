@@ -1,6 +1,7 @@
-from .simulation import (AZURE_NET, CLUSTER_NET, BatchCompute, Compute, Get,
-                         NetProfile, Node, Put, SimFuture, Simulator, Sleep,
-                         Trigger, WaitFor)
+from .simulation import (AZURE_NET, CLUSTER_NET, CPU_POOL, GPU_A100,
+                         GPU_H100, UNIFORM, BatchCompute, Compute, Get,
+                         HardwareProfile, NetProfile, Node, Put, SimFuture,
+                         Simulator, Sleep, Trigger, WaitFor)
 from .batching import BatchCostModel
 from .stats import P2Quantile, StageStats
 from .scheduler import (LeastLoadedScheduler, RandomScheduler,
@@ -8,17 +9,18 @@ from .scheduler import (LeastLoadedScheduler, RandomScheduler,
                         node_load)
 from .executor import Runtime, TaskContext
 from .faults import FaultInjector, set_straggler
-from .autoscale import AutoScaler, ScaleDecision
+from .autoscale import AutoScaler, AutoscalePolicy, ScaleDecision
 
 __all__ = [
     "AZURE_NET", "CLUSTER_NET", "BatchCompute", "Compute", "Get",
     "NetProfile", "Node", "Put", "SimFuture", "Simulator", "Sleep",
     "Trigger", "WaitFor",
+    "CPU_POOL", "GPU_A100", "GPU_H100", "UNIFORM", "HardwareProfile",
     "BatchCostModel",
     "P2Quantile", "StageStats",
     "LeastLoadedScheduler", "RandomScheduler", "ReplicaScheduler",
     "Scheduler", "ShardLocalScheduler", "node_load",
     "Runtime", "TaskContext",
     "FaultInjector", "set_straggler",
-    "AutoScaler", "ScaleDecision",
+    "AutoScaler", "AutoscalePolicy", "ScaleDecision",
 ]

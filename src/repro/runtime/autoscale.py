@@ -1,89 +1,385 @@
-"""Elastic scaling with affinity-stable resharding.
+"""SLO-driven elastic scaling inside the DES, with affinity-stable resharding.
 
 The paper's §3.2 'lightweight' requirement: resharding must not require a
-synchronized key->shard map.  With rendezvous placement only ~1/n of
-affinity GROUPS move when a shard joins/leaves; the autoscaler monitors
-queue depth, proposes a new shard count, gets the migration plan from
-``GroupRegistry`` and executes it as background transfers (group-granular —
-a group is a unit of migration, which is exactly what makes migration safe
-wrt ordering: the group's sequencer drains before the move).
+synchronized key->shard map.  With rendezvous (or pinned/sticky) placement
+only a fraction of affinity GROUPS move when a shard slot joins or leaves;
+the scaler executes exactly those moves and charges their bytes as
+background NIC transfers (group = migration unit, which is what makes a
+move safe wrt ordering: the group's sequencer drains before the switch).
+
+This module used to be a standalone toy driven by an instantaneous queue
+depth sample, invoked by nobody.  It is now a *periodic controller running
+inside the simulation*:
+
+  * **Pressure signal** — a windowed :class:`repro.runtime.StageStats`
+    sketch of end-to-end latency (fed by the workflow tracker, reset every
+    controller period) read at the SLO quantile, combined with the member
+    nodes' backlogged compute-seconds per lane (``Node.pending``).  Both
+    are O(1) reads; neither is an instantaneous queue peek.
+  * **Actuation** — grow/shrink every managed pool by one shard slot *in
+    lockstep* (the pools of one workflow share slot indices under gang
+    placement, so scaling is workflow-atomic like admission), taking the
+    new slot's nodes from the spare list and returning a retired slot's
+    nodes to it.
+  * **Cost** — every object whose home changes lands on its new shard via
+    a charged background transfer; nothing moves for free.
+
+``WorkflowRuntime.enable_autoscale`` wires a scaler to a workflow's
+instance pools, tier spares, and tracker; the scaler also works directly
+against a bare :class:`repro.runtime.Runtime` (see tests/test_elasticity).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core import GroupRegistry, MigrationPlan
 from repro.core.object_store import Shard
-from .executor import Runtime
+from .stats import StageStats
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalePolicy:
+    """Controller gains/bounds — one instance serves every load level.
+
+    ``interval`` is the controller period in sim seconds; pressure is
+    ``max(latency_q / slo, backlog_seconds / slo, reject-shed)`` where
+    ``latency_q`` is the window sketch's ``slo_quantile``,
+    ``backlog_seconds`` the worst member node's admitted-but-unfinished
+    compute per lane (the signal that still moves when overload stalls
+    completions entirely), and reject-shed the admission gate's turned-
+    away demand.  Scale out above ``high_pressure`` with spares
+    available — by up to ``max_step`` slots when pressure is a multiple
+    of the threshold — and in below ``low_pressure``.  Cooldowns are
+    asymmetric (``cooldown_out`` < ``cooldown_in``): capacity shortfall
+    costs SLOs immediately, surplus only costs node-seconds, so the
+    controller reacts fast upward and settles slowly downward.
+    """
+    interval: float = 0.05
+    slo_quantile: float = 0.95
+    high_pressure: float = 1.0
+    low_pressure: float = 0.35
+    min_samples: int = 12          # window observations before latency counts
+    cooldown_out: int = 1          # quiet periods after a scale-out
+    cooldown_in: int = 4           # quiet periods after a scale-in
+    max_step: int = 2              # largest one-decision scale-out
+    min_shards: int = 1
+    backlog_weight: float = 1.0
 
 
 @dataclasses.dataclass
 class ScaleDecision:
-    pool: str
+    t: float                       # virtual time of the decision
     old_shards: int
     new_shards: int
+    pressure: float
     reason: str
+    bytes_moved: int = 0
+    groups_moved: int = 0
 
 
 class AutoScaler:
-    def __init__(self, runtime: Runtime, pool_prefix: str,
-                 spare_nodes: Sequence[str],
-                 high_watermark: int = 8, low_watermark: int = 1):
-        self.rt = runtime
-        self.pool_prefix = pool_prefix
-        self.spare = list(spare_nodes)
-        self.high = high_watermark
-        self.low = low_watermark
-        self.registry = GroupRegistry(runtime.store)
-        self.decisions: List[ScaleDecision] = []
+    """Periodic SLO-pressure controller over a lockstep group of pools.
 
-    def queue_depth(self) -> int:
-        pool = self.rt.store.pools[self.pool_prefix]
-        depth = 0
-        for shard in pool.shards.values():
-            for n in shard.nodes:
-                node = self.rt.nodes[n]
-                depth = max(depth, len(node.queues["gpu"])
-                            + node.in_use["gpu"])
-        return depth
+    ``pools`` are resharded together (equal slot counts — the gang-pin
+    invariant); ``spare_nodes`` is the ordered standby list scale-out
+    consumes from and scale-in returns to, so capacity is conserved
+    across any out/in sequence.  ``slo`` is the latency objective
+    pressure is normalized by.
+    """
+
+    def __init__(self, runtime, pools: Sequence[str],
+                 spare_nodes: Sequence[str], slo: float,
+                 policy: Optional[AutoscalePolicy] = None,
+                 resources: Sequence[str] = ("gpu", "cpu")):
+        assert slo > 0, slo
+        self.rt = runtime
+        self.pools = list(pools)
+        assert self.pools, "autoscaler needs at least one managed pool"
+        counts = {p: len(runtime.store.pools[p].engine.shards)
+                  for p in self.pools}
+        assert len(set(counts.values())) == 1, \
+            f"managed pools must share a slot count, got {counts}"
+        slot_nodes = None
+        for p in self.pools:
+            pool = runtime.store.pools[p]
+            for shard in pool.shards.values():
+                assert len(shard.nodes) == 1, \
+                    "autoscaled pools use replication=1 (slot == node)"
+            # lockstep actuation installs/retires ONE node per slot index
+            # across every pool — that is only sound when slot i already
+            # means the same node everywhere (the WorkflowRuntime layout)
+            nodes = tuple(tuple(pool.shards[s].nodes)
+                          for s in pool.engine.shards)
+            if slot_nodes is None:
+                slot_nodes = nodes
+            else:
+                assert nodes == slot_nodes, \
+                    f"managed pools must share the slot->node mapping " \
+                    f"({self.pools[0]} vs {p})"
+        self.spare = list(spare_nodes)
+        self.slo = slo
+        self.policy = policy or AutoscalePolicy()
+        self.resources = tuple(resources)
+        self.decisions: List[ScaleDecision] = []
+        self._window = StageStats()
+        self._window_rejects = 0
+        self._observed = 0          # completions ever seen (any window)
+        self._cooldown = 0
+        self._pending_ticks = 0
+        # node-seconds accounting: (t, active_node_count) step function,
+        # integrated by node_seconds() — the benchmark's cost axis
+        self._active_log: List[Tuple[float, int]] = [
+            (runtime.sim.now, self._n_active())]
+
+    # -- signal feeds -------------------------------------------------------
+
+    def observe_latency(self, x: float) -> None:
+        """Feed one end-to-end completion span into the pressure window
+        (the workflow tracker registers this as a completion sink)."""
+        self._observed += 1
+        self._window.observe(x)
+
+    def observe_reject(self) -> None:
+        """Feed one admission rejection into the pressure window.
+
+        An admission gate only turns work away when its deadline provably
+        cannot be met on the CURRENT tier mix — so rejected demand is
+        capacity shortfall by definition, and without this feed the gate
+        and the scaler deadlock: admission keeps queues bounded, bounded
+        queues keep latency under the SLO, and the scaler sees a healthy
+        cluster while users are being turned away."""
+        self._observed += 1
+        self._window_rejects += 1
+
+    # -- introspection ------------------------------------------------------
+
+    def _n_active(self) -> int:
+        return len(self._active_nodes())
+
+    def _active_nodes(self) -> List[str]:
+        # engine.shards is the ACTIVE slot list; pool.shards additionally
+        # retains retired (drained) shards so stragglers dispatched to a
+        # just-removed slot still resolve it
+        pool = self.rt.store.pools[self.pools[0]]
+        return [n for name in pool.engine.shards
+                for n in pool.shards[name].nodes]
+
+    def node_seconds(self, until: Optional[float] = None) -> float:
+        """Integral of active node count over virtual time (the capacity
+        actually paid for — the fair-comparison axis vs static sizing)."""
+        end = self.rt.sim.now if until is None else until
+        total = 0.0
+        log = self._active_log
+        for i, (t, n) in enumerate(log):
+            t1 = log[i + 1][0] if i + 1 < len(log) else end
+            total += max(t1 - t, 0.0) * n
+        return total
+
+    def backlog_seconds(self) -> float:
+        """Worst member node's admitted-but-unfinished compute seconds per
+        lane over the managed resources (O(1) per node — ``Node.pending``
+        is maintained by the compute handlers)."""
+        worst = 0.0
+        for name in self._active_nodes():
+            node = self.rt.nodes[name]
+            for r in self.resources:
+                cap = node.capacity.get(r, 0)
+                if cap:
+                    worst = max(worst, node.pending[r] / cap)
+        return worst
+
+    def pressure(self) -> Tuple[float, str]:
+        """(pressure, dominant-signal) — normalized so 1.0 means 'the SLO
+        is exactly spent'."""
+        pol = self.policy
+        lat = 0.0
+        if self._window.count >= pol.min_samples:
+            lat = self._window.quantile(pol.slo_quantile) / self.slo
+        backlog = self.backlog_seconds() / self.slo * pol.backlog_weight
+        if self._window_rejects:
+            # shed demand saturates the signal (see observe_reject);
+            # magnitude grows with the shed fraction so sustained heavy
+            # rejection keeps scaling through consecutive cooldowns
+            shed = self._window_rejects / max(
+                self._window.count + self._window_rejects, 1)
+            rej = pol.high_pressure * (1.0 + shed)
+            if rej > max(lat, backlog):
+                return rej, "rejects"
+        if backlog > lat:
+            return backlog, "backlog"
+        return lat, f"p{round(pol.slo_quantile * 100)}"
+
+    # -- the controller -----------------------------------------------------
+
+    def start(self) -> "AutoScaler":
+        """Begin periodic evaluation inside the DES.  Ticks reschedule only
+        while the heap holds real work (same guard as the migration
+        driver), so bounded workloads still terminate."""
+        self._schedule_tick()
+        return self
+
+    def _schedule_tick(self) -> None:
+        self._pending_ticks += 1
+        self.rt._pending_ticks += 1
+        self.rt.sim.after(self.policy.interval, self._tick)
+
+    def _tick(self) -> None:
+        self._pending_ticks -= 1
+        self.rt._pending_ticks -= 1
+        decision = self.evaluate()
+        if decision is not None:
+            self.apply(decision)
+        self._window = StageStats()            # fresh pressure window
+        self._window_rejects = 0
+        if len(self.rt.sim._heap) > self.rt._pending_ticks:
+            self._schedule_tick()
 
     def evaluate(self) -> Optional[ScaleDecision]:
-        pool = self.rt.store.pools[self.pool_prefix]
-        n = len(pool.shards)
-        depth = self.queue_depth()
-        if depth >= self.high and self.spare:
-            return ScaleDecision(self.pool_prefix, n, n + 1,
-                                 f"queue depth {depth} >= {self.high}")
-        if depth <= self.low and n > 1:
-            return ScaleDecision(self.pool_prefix, n, n - 1,
-                                 f"queue depth {depth} <= {self.low}")
+        pol = self.policy
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return None
+        n = len(self.rt.store.pools[self.pools[0]].engine.shards)
+        p, signal = self.pressure()
+        if p >= pol.high_pressure and self.spare:
+            # pressure at k x the threshold asks for k slots (cap at
+            # max_step and the spare inventory): a cliff-shaped ramp
+            # should not be climbed one cooldown at a time
+            step = min(len(self.spare), pol.max_step,
+                       max(1, int(p / pol.high_pressure)))
+            return ScaleDecision(t=self.rt.sim.now, old_shards=n,
+                                 new_shards=n + step, pressure=p,
+                                 reason=f"{signal} pressure {p:.2f} >= "
+                                        f"{pol.high_pressure}")
+        if p <= pol.low_pressure and n > pol.min_shards and \
+                self._observed > 0:
+            return ScaleDecision(t=self.rt.sim.now, old_shards=n,
+                                 new_shards=n - 1, pressure=p,
+                                 reason=f"{signal} pressure {p:.2f} <= "
+                                        f"{pol.low_pressure}")
         return None
 
-    def apply(self, decision: ScaleDecision) -> MigrationPlan:
-        """Reshard the pool and physically move affected groups."""
-        pool = self.rt.store.pools[self.pool_prefix]
-        plan = self.registry.plan_resharding(self.pool_prefix,
-                                             decision.new_shards)
-        old_shards = dict(pool.shards)
-        # build the new shard set
-        members: List[str] = []
-        for s in old_shards.values():
-            members.extend(s.nodes)
-        if decision.new_shards > len(old_shards):
-            members.append(self.spare.pop(0))
-        new_shards = []
-        per = max(len(members) // decision.new_shards, 1)
-        for i in range(decision.new_shards):
-            new_shards.append(
-                Shard(f"{pool.prefix}#s{i}", members[i * per:(i + 1) * per]))
-        pool.shards = {s.name: s for s in new_shards}
-        pool.engine.shards = [s.name for s in new_shards]
-        # migrate objects into the new shard instances (group = migration
-        # unit; unmoved groups land in the same-named shard at zero cost,
-        # moved groups are the plan's transfer bytes)
-        for shard in old_shards.values():
-            for key, rec in list(shard.objects.items()):
-                pool.home(key).objects[key] = rec
+    # -- actuation ----------------------------------------------------------
+
+    def force(self, new_shards: int, reason: str = "forced"
+              ) -> ScaleDecision:
+        """Apply a manual resharding (static pre-provisioning, tests):
+        bypasses pressure evaluation but uses the same actuation path —
+        charged migrations, lockstep pools, spare accounting."""
+        n = len(self.rt.store.pools[self.pools[0]].engine.shards)
+        return self.apply(ScaleDecision(t=self.rt.sim.now, old_shards=n,
+                                        new_shards=new_shards,
+                                        pressure=0.0, reason=reason))
+
+    def apply(self, decision: ScaleDecision) -> ScaleDecision:
+        """Reshard every managed pool to ``decision.new_shards`` slots and
+        physically move affected groups, charging their bytes.
+
+        Scale-out consumes the next spare node; scale-in retires the
+        highest slot and RETURNS its node to the spare list (capacity is
+        conserved — the pre-rewrite scaler leaked it, so scale-out after
+        scale-in permanently lost a node).
+        """
+        store = self.rt.store
+        grow = decision.new_shards > decision.old_shards
+        delta = abs(decision.new_shards - decision.old_shards)
+        if grow:
+            assert delta <= len(self.spare), \
+                f"scale-out of {delta} exceeds spare inventory " \
+                f"{self.spare}"
+            new_nodes = [self.spare.pop(0) for _ in range(delta)]
+        else:
+            assert decision.new_shards >= 1, decision
+            new_nodes = []
+        retired_nodes: List[str] = []
+        total_bytes = 0
+        total_groups = 0
+        # workflow-atomic retirement: a gang pinned to the retiring slot
+        # would otherwise fall back to policy placement pool-by-pool,
+        # scattering an in-flight workflow across slots mid-execution.
+        # Re-pin every such label to ONE surviving slot (the anchor
+        # pool's policy picks it; the same slot INDEX applies in every
+        # lockstep pool), then the re-home pass below moves its objects
+        # there as ordinary charged migrations.
+        if not grow:
+            anchor = store.pools[self.pools[0]].engine
+            retiring_set = set(anchor.shards[-delta:])
+            stranded = [lbl for lbl, sh in anchor.pins.items()
+                        if sh in retiring_set]
+            for lbl in stranded:
+                anchor.unpin(lbl)
+            survivors = anchor.shards[:-delta]
+            for lbl in stranded:
+                idx = survivors.index(
+                    anchor.policy.place(lbl, survivors))
+                for prefix in self.pools:
+                    eng = store.pools[prefix].engine
+                    eng.pin(lbl, eng.shards[idx])
+        for prefix in self.pools:
+            pool = store.pools[prefix]
+            # snapshot current homes (dedup replays: key -> (shard, rec))
+            old_homes: Dict[str, Tuple[str, object]] = {}
+            for shard in pool.shards.values():
+                for key, rec in shard.objects.items():
+                    old_homes.setdefault(key, (shard.name, rec))
+            if grow:
+                stage_res = {b.resource for b in
+                             self.rt.bindings.values()
+                             if b.udl.prefix == prefix}
+                for i, new_node in enumerate(new_nodes):
+                    sname = f"{pool.prefix}#s{decision.old_shards + i}"
+                    pool.shards[sname] = Shard(sname, [new_node])
+                    pool.engine.add_shard(sname)
+                    # heterogeneous spares: weight the new slot by its
+                    # tier's throughput for the work this pool triggers
+                    # so capacity-normalized placement fills it in
+                    # proportion to what it can actually drain
+                    prof = self.rt.nodes[new_node].profile
+                    pool.engine.set_capacity(
+                        sname,
+                        max((prof.speed_of(r) for r in stage_res),
+                            default=prof.nominal_speed))
+            else:
+                for _ in range(delta):
+                    sname = pool.engine.shards[-1]
+                    if prefix == self.pools[0]:
+                        retired_nodes.extend(pool.shards[sname].nodes)
+                    pool.engine.remove_shard(sname)
+                    # slot is gone for placement; its objects drain
+                    # below.  The (empty) shard object stays in
+                    # pool.shards so work already dispatched to the slot
+                    # still resolves it.
+            # re-home: move every object whose home changed under the new
+            # slot set (pins/sticky bindings keep in-flight groups put;
+            # rendezvous moves ~1/n of the rest)
+            moved_labels = set()
+            for key, (old_shard, rec) in old_homes.items():
+                new_shard = pool.home(key)
+                if new_shard.name == old_shard:
+                    continue
+                pool.shards[old_shard].objects.pop(key, None)
+                new_shard.objects[key] = rec
+                total_bytes += rec.size
+                moved_labels.add(rec.affinity)
+                store.stats.bytes_migrated += rec.size
+                # ledger transfer for capacity-normalized policies:
+                # credit the destination ONLY for moves off retired
+                # slots (whose whole counter remove_shard just dropped)
+                # — a surviving source keeps its charge, so crediting
+                # again would double-count the bytes
+                if old_shard not in pool.engine.shards:
+                    pool.engine.record_load(new_shard.name, rec.size)
+                if new_shard.nodes:
+                    self.rt.sim._charge_transfer(
+                        self.rt.nodes[new_shard.nodes[0]], rec.size)
+                store.invalidate_cached([key])
+            store.stats.migrations += len(moved_labels)
+            total_groups += len(moved_labels)
+        self.spare.extend(retired_nodes)          # capacity conserved
+        decision.bytes_moved = total_bytes
+        decision.groups_moved = total_groups
         self.decisions.append(decision)
-        return plan
+        self._cooldown = (self.policy.cooldown_out if grow
+                          else self.policy.cooldown_in)
+        self._active_log.append((self.rt.sim.now, self._n_active()))
+        return decision

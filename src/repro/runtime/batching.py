@@ -98,6 +98,14 @@ class BatchCostModel:
             return 1.0
         return n / self.batch_seconds(1.0, n)
 
+    def drain_rate(self, unit_seconds: float, n: int) -> float:
+        """Items/second one lane drains running back-to-back batches of
+        ``n`` — the capacity side of the planner's utilization check
+        (arrivals faster than this per lane means the queue only grows)."""
+        if unit_seconds <= 0.0:
+            return float("inf")
+        return max(n, 1) / self.batch_seconds(unit_seconds, max(n, 1))
+
 
 # the engine-calibrated default: decode batching on a serving row
 DEFAULT_COST_MODEL = BatchCostModel()

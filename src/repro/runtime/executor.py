@@ -15,8 +15,9 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core import CascadeStore, GroupMigrator, GroupSequencer
 from repro.core.object_store import Shard, UDL
-from .simulation import (AZURE_NET, CLUSTER_NET, Compute, Get, NetProfile,
-                         Node, Put, Simulator, Sleep, Trigger)
+from .simulation import (AZURE_NET, CLUSTER_NET, UNIFORM, Compute, Get,
+                         HardwareProfile, NetProfile, Node, Put, Simulator,
+                         Sleep, Trigger)
 from .scheduler import Scheduler, ShardLocalScheduler
 
 
@@ -48,10 +49,13 @@ class Runtime:
                  scheduler: Optional[Scheduler] = None,
                  seed: int = 0,
                  hedge_after: Optional[float] = None,
-                 log_tasks: bool = True):
+                 log_tasks: bool = True,
+                 node_profiles: Optional[Dict[str, HardwareProfile]] = None):
         resources = node_resources or {
             n: {"gpu": 1, "cpu": 2, "nic": 2} for n in store.nodes}
-        self.nodes = {n: Node(n, r) for n, r in resources.items()}
+        profiles = node_profiles or {}
+        self.nodes = {n: Node(n, r, profile=profiles.get(n, UNIFORM))
+                      for n, r in resources.items()}
         self.sim = Simulator(store, self.nodes, net=net, seed=seed)
         self.sim.udl_dispatch = self._dispatch
         self.store = store

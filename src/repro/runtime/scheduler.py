@@ -37,17 +37,26 @@ class Scheduler:
 
 
 def node_load(node: Node, resource: str) -> float:
-    """Fractional occupancy of ``resource`` on ``node``.
+    """Throughput-normalized occupancy of ``resource`` on ``node``.
 
-    ``(in_use + queued) / capacity`` — < 1.0 means a free lane, 1.0 all
-    lanes busy with empty queues, > 1.0 a backlog ``load - 1`` service
-    slots deep.  This is THE load signal shared by batch-aware dispatch
+    ``(in_use + queued) / capacity / rate`` — raw fractional occupancy
+    (< 1.0 means a free lane, > 1.0 a backlog ``occ - 1`` service slots
+    deep) divided by the node's effective service rate for ``resource``
+    (tier speed x straggler dial), so the signal reads as *backlog in
+    service-time units*: a fast tier drains a queued slot sooner than a
+    slow tier runs an admitted one, and dispatch ranks them accordingly
+    (an idle slow node still beats a saturated fast one — occupancy 0 is
+    0 at any speed).  On the uniform single-profile cluster the divisor
+    is exactly 1.0, so every pre-tier ranking is byte-identical.  This is
+    THE load signal shared by batch-aware dispatch
     (``Scheduler.pick_batch``), the adaptive batch planner's queue-depth
     input, and the serving engine's row scheduler, so "prefer free lanes
-    and shallow queues" means the same thing at every layer.
+    and shallow queues, weighted by how fast they drain" means the same
+    thing at every layer.
     """
     cap = node.capacity.get(resource, 1) or 1
-    return (node.in_use[resource] + len(node.queues[resource])) / cap
+    occ = (node.in_use[resource] + len(node.queues[resource])) / cap
+    return occ / max(node.rate(resource), 1e-9)
 
 
 def _least_loaded_on(candidates: Sequence[str], nodes: Dict[str, Node],

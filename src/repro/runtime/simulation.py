@@ -30,9 +30,11 @@ import heapq
 import itertools
 import random
 from collections import defaultdict, deque
-from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
+from typing import (Any, Callable, Dict, Generator, List, Mapping, Optional,
+                    Tuple)
 
 from repro.core import CascadeStore
+from .batching import BatchCostModel
 
 
 # ---------------------------------------------------------------------------
@@ -53,6 +55,69 @@ class NetProfile:
 CLUSTER_NET = NetProfile(bandwidth=12.5e9, rtt=10e-6)
 # paper §5: Azure — EH/blob/cosmos hops, ~10 Gbps effective, ms-scale RTTs
 AZURE_NET = NetProfile(bandwidth=1.25e9, rtt=1e-3, store_latency=4e-3)
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    """A backend tier's hardware shape: per-resource service rates, lane
+    counts, and the tier's own batch-amortization curve.
+
+    Stage ``cost`` is declared in *reference-hardware* seconds; a node with
+    profile speed ``s`` for the stage's resource services it in ``cost/s``
+    seconds.  ``batch_fixed``/``batch_marginal``/``max_batch`` describe how
+    the tier amortizes batched invocations (weight-streaming share vs
+    per-item share, and the largest batch its memory/lane shape admits);
+    when left ``None`` the layer-shared :class:`BatchCostModel` prices the
+    tier, which keeps the homogeneous single-profile case byte-identical
+    to the pre-tier behavior.
+    """
+    name: str = "uniform"
+    speed: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    resources: Mapping[str, int] = dataclasses.field(
+        default_factory=lambda: {"gpu": 1, "cpu": 2, "nic": 2})
+    batch_fixed: Optional[float] = None      # None -> shared cost model
+    batch_marginal: Optional[float] = None
+    max_batch: Optional[int] = None
+
+    def speed_of(self, resource: str) -> float:
+        return self.speed.get(resource, 1.0)
+
+    @property
+    def nominal_speed(self) -> float:
+        """Scalar throughput weight (capacity-aware placement ranking)."""
+        return max(self.speed.values(), default=1.0)
+
+    def cost_model(self) -> Optional[BatchCostModel]:
+        """The tier's own batching economics, or None for the shared one."""
+        if self.batch_fixed is None:
+            return None
+        return BatchCostModel(fixed=self.batch_fixed,
+                              marginal=self.batch_marginal
+                              if self.batch_marginal is not None else
+                              1.0 - self.batch_fixed,
+                              max_batch=self.max_batch or 16)
+
+
+#: The homogeneous default: every pre-tier construction maps onto it.
+UNIFORM = HardwareProfile()
+
+# Named tiers (benchmarks/fig10, docs/elasticity.md).  Speeds are relative
+# to the A100 reference (stage costs are calibrated in A100-seconds);
+# batch curves: newer parts stream weights relatively faster (higher fixed
+# share -> deeper amortization) and admit bigger batches, CPU pools
+# amortize almost nothing.
+GPU_H100 = HardwareProfile(
+    name="H100", speed={"gpu": 2.0, "cpu": 1.2},
+    resources={"gpu": 1, "cpu": 2, "nic": 2},
+    batch_fixed=0.75, batch_marginal=0.25, max_batch=32)
+GPU_A100 = HardwareProfile(
+    name="A100", speed={"gpu": 1.0, "cpu": 1.0},
+    resources={"gpu": 1, "cpu": 2, "nic": 2},
+    batch_fixed=0.65, batch_marginal=0.35, max_batch=16)
+CPU_POOL = HardwareProfile(
+    name="CPU", speed={"gpu": 0.2, "cpu": 1.0},
+    resources={"gpu": 1, "cpu": 4, "nic": 2},
+    batch_fixed=0.25, batch_marginal=0.75, max_batch=4)
 
 
 # ---------------------------------------------------------------------------
@@ -137,12 +202,13 @@ TaskGen = Generator[Any, Any, None]
 
 class Node:
     def __init__(self, name: str, resources: Dict[str, int],
-                 speed: float = 1.0):
+                 speed: float = 1.0, profile: HardwareProfile = UNIFORM):
         self.name = name
         self.capacity = dict(resources)           # resource -> lanes
         self.in_use: Dict[str, int] = defaultdict(int)
         self.queues: Dict[str, deque] = defaultdict(deque)
         self.speed = speed                        # <1.0 => straggler
+        self.profile = profile                    # backend tier hardware
         self.up = True
         # admitted-but-unfinished compute seconds per resource: the
         # "queue depth in seconds" load signal (maintained O(1) by the
@@ -152,6 +218,11 @@ class Node:
         self.busy_time: Dict[str, float] = defaultdict(float)
         self.n_tasks = 0
         self.queue_wait: float = 0.0
+
+    def rate(self, resource: str) -> float:
+        """Effective service rate for ``resource``: the tier's speed times
+        the node's straggler dial.  1.0 on the uniform default profile."""
+        return self.speed * self.profile.speed_of(resource)
 
     def __repr__(self):
         return f"Node({self.name})"
@@ -181,6 +252,10 @@ class Simulator:
         self.events_fired = 0
         self.metrics: Dict[str, Any] = defaultdict(list)
         self.udl_dispatch: Optional[Callable] = None  # set by Runtime
+        # called as on_release(node, resource) when a lane frees with an
+        # empty queue (the work-conserving flush hook the adaptive
+        # batcher uses); None costs one branch on the release hot path
+        self.on_release: Optional[Callable[[Node, str], None]] = None
         self._waiters: Dict[str, List[Tuple[Node, Any, Callable]]] = \
             defaultdict(list)
         # per-op-type handler table (replaces an isinstance chain in the
@@ -271,6 +346,8 @@ class Simulator:
             node.queue_wait += self.now - enq
             fn()
             return
+        if self.on_release is not None and node.up:
+            self.on_release(node, resource)
 
     # -- task execution ---------------------------------------------------------
 
@@ -315,7 +392,7 @@ class Simulator:
     # -- op handlers --------------------------------------------------------
 
     def _op_compute(self, node: Node, op, cont) -> None:
-        dur = op.seconds / max(node.speed, 1e-9)
+        dur = op.seconds / max(node.rate(op.resource), 1e-9)
         node.pending[op.resource] += dur
 
         def start():

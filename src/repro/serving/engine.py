@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.models import Model
 from repro.runtime.batching import BatchCostModel
-from repro.runtime.simulation import CLUSTER_NET, NetProfile
+from repro.runtime.simulation import (CLUSTER_NET, UNIFORM, HardwareProfile,
+                                      NetProfile)
 from . import kv_cache as kvc
 from .adapters import AdapterStore, apply_adapter
 from .sessions import Session, SessionRouter
@@ -51,7 +52,7 @@ class TurnMetrics:
 
 class Row:
     def __init__(self, model: Model, params: Any, max_slots: int,
-                 max_seq: int):
+                 max_seq: int, profile: HardwareProfile = UNIFORM):
         self.model = model
         self.params = params
         self.cache = model.init_cache(max_slots, max_seq)
@@ -60,6 +61,11 @@ class Row:
         self.slot_sid: List[Optional[str]] = [None] * max_slots
         self.busy_until = 0.0
         self.decoded_tokens = 0
+        # backend tier: virtual decode time divides by the gpu speed, and
+        # the tier's own batch curve (if declared) prices amortization
+        self.profile = profile
+        self.speed = profile.speed_of("gpu")
+        self.cost_model = profile.cost_model()   # None -> engine-shared
 
     def free_slot(self) -> Optional[int]:
         for i, a in enumerate(self.active):
@@ -81,10 +87,13 @@ class ServingEngine:
                  max_slots: int = 8, max_seq: int = 256,
                  policy: str = "affinity",
                  net: NetProfile = CLUSTER_NET, seed: int = 0,
-                 cost_model: Optional[BatchCostModel] = None):
+                 cost_model: Optional[BatchCostModel] = None,
+                 row_profiles: Optional[Sequence[HardwareProfile]] = None):
         self.model = model
-        self.rows = [Row(model, params, max_slots, max_seq)
-                     for _ in range(n_rows)]
+        profs = list(row_profiles or [])
+        profs += [UNIFORM] * (n_rows - len(profs))
+        self.rows = [Row(model, params, max_slots, max_seq,
+                         profile=profs[i]) for i in range(n_rows)]
         self.router = SessionRouter(n_rows, policy=policy, seed=seed)
         self.adapters = AdapterStore(n_rows)
         self.net = net
@@ -177,16 +186,19 @@ class ServingEngine:
         t += self.net.transfer_time(mig_bytes) if mig_bytes else 0.0
 
         # prefill the prompt token-by-token through decode_step (keeps the
-        # slotted cache layout; fine at test scale)
+        # slotted cache layout; fine at test scale); like decode, virtual
+        # prefill time divides by the row's tier speed
         toks = list(prompt)
-        t_prefill = self._svc["prefill_per_tok"] * len(toks)
+        t_prefill = self._svc["prefill_per_tok"] * len(toks) / row.speed
         for tok in toks:
             row.cache, row.lengths = self._advance(row, slot, tok)
-        # virtual step cost: the shared batching curve amortized over the
-        # row's co-resident sessions — one real decode_step advances every
-        # active slot, so a fuller row prices each token cheaper
-        t_step = self.cost_model.step_seconds(self._svc["decode_step"],
-                                              row.load())
+        # virtual step cost: the row's tier batch curve (engine-shared on
+        # uniform rows) amortized over co-resident sessions — one real
+        # decode_step advances every active slot, so a fuller row prices
+        # each token cheaper — divided by the tier's gpu speed
+        cm = row.cost_model or self.cost_model
+        t_step = cm.step_seconds(self._svc["decode_step"],
+                                 row.load()) / row.speed
         ttft = (t + t_prefill + t_step) - now
 
         out: List[int] = []

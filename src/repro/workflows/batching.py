@@ -96,9 +96,23 @@ class StageBatcher:
         self.cost_model = cost_model or BatchCostModel(
             max_batch=self.policy.max_batch)
         self.planner = planner                 # BatchPlanner or None
+        if planner is not None:
+            # the planner's drain-rate controller plans generous windows
+            # under backlog; the work-conserving release flush is what
+            # makes them safe — a lane freeing with nothing queued flushes
+            # every non-held open batch it could run, so a long window
+            # never leaves hardware idle while members wait.  Static-
+            # window batching (no planner) keeps the original semantics.
+            self.sim.on_release = self._on_release
         self._open: Dict[Tuple[str, str], _OpenBatch] = {}
+        # (node, resource) -> open-batch keys a lane release could flush
+        self._open_by_node: Dict[Tuple[str, str], set] = {}
         # at most one pending window timer per (stage, slot): time it fires
         self._timer_at: Dict[Tuple[str, str], float] = {}
+        # node -> the cost model pricing ITS batches: the node's hardware
+        # profile's own curve when it declares one, else the shared model
+        # (so a uniform cluster prices exactly as before tiers existed)
+        self._node_cm: Dict[str, BatchCostModel] = {}
         # realized-coalescing stats (summary() reports them)
         self.n_batches = 0
         self.enrolled = 0
@@ -119,6 +133,10 @@ class StageBatcher:
         now = self.sim.now
         bkey = (stage.name, ctx.shard)
         planner = self.planner
+        # the economic idle rule reads the arrival-gap EWMA as of BEFORE
+        # this arrival (the wait it prices is the gap to the *next* one)
+        hold = planner is not None and planner.hold_when_idle(
+            stage.name, ctx.shard, stage.cost)
         if planner is not None:
             planner.note_arrival(stage.name, ctx.shard, now)
         batch = self._open.get(bkey)
@@ -134,6 +152,10 @@ class StageBatcher:
             batch = _OpenBatch(stage.name, ctx.shard, stage.resource,
                                stage.cost, now + window, cap)
             self._open[bkey] = batch
+            if planner is not None:
+                for n in self._shard_for(ctx.key, ctx.shard).nodes:
+                    self._open_by_node.setdefault(
+                        (n, stage.resource), {})[bkey] = None
         batch.keys.append(ctx.key)
         self.enrolled += 1
         if deadline is not None and deadline >= now + \
@@ -146,9 +168,11 @@ class StageBatcher:
             # needs (the planner's max-throughput mode relies on this)
             if batch.deadline_min is None or deadline < batch.deadline_min:
                 batch.deadline_min = deadline
-        if fresh and self.policy.idle_flush and \
+        if fresh and self.policy.idle_flush and not hold and \
                 self._resource_idle(batch):
-            # nothing ahead of us: waiting can only add latency
+            # nothing ahead of us: waiting can only add latency (unless
+            # the planner's economic rule says the next member's
+            # amortization saving is worth one arrival gap of idleness)
             self.idle_flushes += 1
             self._flush(batch)
         elif batch.deadline_min is not None and not batch.closed:
@@ -163,9 +187,18 @@ class StageBatcher:
                     batch.deadline_min:
                 self.slo_flushes += 1
                 self._flush(batch)
+            elif planner is not None:
+                # adaptive mode: make the WINDOW TIMER enforce the SLO
+                # too — if this slot's arrival stream dries up (e.g. a
+                # scale-out diverts it), no further enrollment will ever
+                # re-run the check above, and an un-tightened window
+                # would ride past the member's headroom
+                slo_at = batch.deadline_min - est - self.policy.slo_margin
+                if slo_at < batch.flush_at:
+                    batch.flush_at = max(now, slo_at)
         if not batch.closed and len(batch.keys) >= batch.cap:
             self._flush(batch)
-        if fresh and not batch.closed:
+        if not batch.closed:
             # a batch flushed at enrollment (idle/SLO/size) schedules no
             # timer at all, and an undischarged timer left by an earlier
             # early-flushed batch on this key is reused (it rolls forward
@@ -201,19 +234,62 @@ class StageBatcher:
             self.timer_rolls += 1
             self.sim.at(batch.flush_at, self._window_flush, bkey)
 
+    def _on_release(self, node, resource: str) -> None:
+        """Work-conserving flush (adaptive mode): a lane just freed with
+        an empty queue — flush every open batch it could run, except
+        those the economic rule still holds for their next member."""
+        keys = self._open_by_node.get((node.name, resource))
+        if not keys:
+            return
+        planner = self.planner
+        cap = node.capacity.get(resource, 1)
+        for bkey in list(keys):
+            # re-check per flush: the first flush's BatchCompute may
+            # take the freed lane, and pushing the REMAINING batches
+            # into its queue would truncate their formation windows for
+            # no gain — they are no longer filling an idle lane
+            if node.in_use[resource] >= cap or node.queues[resource]:
+                return
+            batch = self._open.get(bkey)
+            if batch is None or batch.closed:
+                keys.pop(bkey, None)
+                continue
+            if planner.hold_when_idle(batch.stage, batch.slot,
+                                      batch.unit_cost):
+                continue
+            self.idle_flushes += 1
+            self._flush(batch)
+
     def _flush(self, batch: _OpenBatch) -> None:
         batch.closed = True
         self._open.pop((batch.stage, batch.slot), None)
+        if self.planner is not None:
+            bkey = (batch.stage, batch.slot)
+            for n in self._shard_for(batch.keys[0], batch.slot).nodes:
+                m = self._open_by_node.get((n, batch.resource))
+                if m is not None:
+                    m.pop(bkey, None)
         n = len(batch.keys)
-        seconds = self.cost_model.batch_seconds(batch.unit_cost, n)
         binding = self.rt.bindings[batch.stage]
         shard = self._shard_for(batch.keys[0], batch.slot)
         node = self.rt.scheduler.pick_batch(
             shard, batch.keys, self.rt.nodes, binding.pool_nodes,
             resource=batch.resource)
+        # price the batch with the EXECUTING backend's amortization curve
+        # (per-tier batching economics); planning used the shared model as
+        # its estimate, execution uses the hardware truth
+        seconds = self._cost_model_for(node).batch_seconds(
+            batch.unit_cost, n)
         self.n_batches += 1
         self.sim.spawn(node, self._run_batch(batch, seconds, n),
                        label=f"batch:{batch.stage}")
+
+    def _cost_model_for(self, node_name: str) -> BatchCostModel:
+        cm = self._node_cm.get(node_name)
+        if cm is None:
+            profile_cm = self.rt.nodes[node_name].profile.cost_model()
+            cm = self._node_cm[node_name] = profile_cm or self.cost_model
+        return cm
 
     def _run_batch(self, batch: _OpenBatch, seconds: float, n: int):
         yield BatchCompute(batch.resource, seconds, n)
@@ -223,6 +299,25 @@ class StageBatcher:
 
     def _shard_for(self, key: str, slot: str):
         return self.rt.store.pool_for(key).shards[slot]
+
+    def forming_seconds(self, node_name: str, resource: str) -> float:
+        """Service seconds held in OPEN batches dispatchable to ``node``
+        — work committed but not yet visible in ``Node.pending`` (it
+        lands there only at flush).  The admission gate adds this so a
+        formation window cannot hide a queue from the feasibility check.
+        Adaptive mode only (the index exists when a planner is attached).
+        """
+        m = self._open_by_node.get((node_name, resource))
+        if not m:
+            return 0.0
+        cm = self._cost_model_for(node_name)
+        total = 0.0
+        for bkey in m:
+            batch = self._open.get(bkey)
+            if batch is not None and not batch.closed:
+                total += cm.batch_seconds(batch.unit_cost,
+                                          len(batch.keys))
+        return total
 
     def _slot_pending(self, key: str, slot: str, resource: str) -> float:
         """Backlogged compute seconds per lane on the slot's least-backed-up

@@ -28,7 +28,9 @@ it onto the store/simulator and owns every placement decision.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.runtime.simulation import UNIFORM, HardwareProfile
 
 # Affinity mode sentinel: group every key of a workflow instance together
 # (see repro.core.affinity.InstanceAffinity).
@@ -37,25 +39,53 @@ INSTANCE = "instance"
 
 @dataclasses.dataclass
 class Tier:
-    """A named group of homogeneous nodes (``<name>0 .. <name>{n-1}``)."""
+    """A named group of same-hardware nodes (``<name>0 .. <name>{n-1}``).
+
+    ``profile`` is the tier's :class:`repro.runtime.HardwareProfile` —
+    per-resource service rates and batch economics; different tiers of one
+    graph model a heterogeneous cluster (GPU generations, CPU pools).
+    ``spares`` declares extra standby nodes (named after the active ones)
+    that exist in the cluster but start outside every pool — the
+    autoscaler's scale-out inventory.
+    """
     name: str
     n_nodes: int
     resources: Dict[str, int]
+    profile: HardwareProfile = UNIFORM
+    spares: int = 0
 
     @property
     def nodes(self) -> List[str]:
         return [f"{self.name}{i}" for i in range(self.n_nodes)]
 
+    @property
+    def spare_nodes(self) -> List[str]:
+        return [f"{self.name}{i}"
+                for i in range(self.n_nodes, self.n_nodes + self.spares)]
+
 
 @dataclasses.dataclass
 class Pool:
-    """An object pool declaration (compiled to ``create_object_pool``)."""
+    """An object pool declaration (compiled to ``create_object_pool``).
+
+    ``tier`` may name ONE tier or a tuple of tiers: a multi-tier pool's
+    shard slots span the listed tiers in order, which is how a stage
+    declares its set of acceptable backends — the stage runs wherever its
+    trigger pool's slots live, so listing ``("h100", "cpu")`` means "this
+    work may land on either hardware" and tier-aware placement/dispatch
+    picks among them by normalized load.
+    """
     prefix: str
-    tier: str
+    tier: Union[str, Tuple[str, ...]]
     shards: int
     replication: int = 1
     affinity: Optional[str] = INSTANCE   # INSTANCE | regex string | None
     migratable: bool = False             # opt into Runtime.enable_migration
+
+    @property
+    def tiers(self) -> Tuple[str, ...]:
+        return (self.tier,) if isinstance(self.tier, str) else \
+            tuple(self.tier)
 
 
 @dataclasses.dataclass
@@ -126,29 +156,41 @@ class WorkflowGraph:
     # -- declaration -------------------------------------------------------
 
     def add_tier(self, name: str, n_nodes: int,
-                 resources: Dict[str, int]) -> Tier:
+                 resources: Dict[str, int],
+                 profile: HardwareProfile = UNIFORM,
+                 spares: int = 0) -> Tier:
         if name in self.tiers:
             raise WorkflowGraphError(f"duplicate tier {name!r}")
-        tier = Tier(name, n_nodes, dict(resources))
+        tier = Tier(name, n_nodes, dict(resources), profile=profile,
+                    spares=spares)
         self.tiers[name] = tier
         return tier
 
-    def add_pool(self, prefix: str, tier: str, shards: int,
+    def add_pool(self, prefix: str,
+                 tier: Union[str, Sequence[str]], shards: int,
                  replication: int = 1, affinity: Optional[str] = INSTANCE,
                  migratable: bool = False) -> Pool:
-        if tier not in self.tiers:
-            raise WorkflowGraphError(f"pool {prefix!r}: unknown tier {tier!r}")
+        tier = tier if isinstance(tier, str) else tuple(tier)
+        pool = Pool(prefix, tier, shards, replication, affinity, migratable)
+        for t in pool.tiers:
+            if t not in self.tiers:
+                raise WorkflowGraphError(
+                    f"pool {prefix!r}: unknown tier {t!r}")
         if any(p.prefix == prefix for p in self.pools):
             raise WorkflowGraphError(f"duplicate pool {prefix!r}")
-        t = self.tiers[tier]
-        if t.n_nodes < shards * replication:
+        n_nodes = len(self.nodes_of(pool))
+        if n_nodes < shards * replication:
             raise WorkflowGraphError(
-                f"pool {prefix!r}: tier {tier!r} has {t.n_nodes} nodes "
-                f"< {shards} shards x {replication} replication")
-        pool = Pool(prefix, tier, shards, replication, affinity, migratable)
+                f"pool {prefix!r}: tier(s) {pool.tiers} have {n_nodes} "
+                f"nodes < {shards} shards x {replication} replication")
         self.pools.append(pool)
         self._validated = False
         return pool
+
+    def nodes_of(self, pool: Pool) -> List[str]:
+        """Active nodes backing ``pool``, in tier declaration order (slot
+        ``i`` of every same-tier-tuple pool maps to the same node set)."""
+        return [n for t in pool.tiers for n in self.tiers[t].nodes]
 
     def add_stage(self, name: str, pool: str, resource: str = "gpu",
                   cost: float = 0.0, reads: Sequence[Read] = (),

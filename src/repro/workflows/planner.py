@@ -66,6 +66,27 @@ class AdaptiveBatchPolicy:
     min_samples: int = 8
     tail_quantile: float = 0.95
     refresh_every: int = 64        # plans between tail-estimate refreshes
+    # saturation (queue-drain) controller: the slot is saturated when
+    # per-lane backlog already exceeds this many unit service times — in
+    # that regime individual deadlines are not the binding constraint,
+    # drain rate is, so the formation window is sized to FILL the cap
+    # instead of being clamped by (exhausted) deadline headroom
+    saturate_backlog: float = 4.0  # unit-costs of backlog => saturated
+    # utilization-controller window floors (the sustained-overload fix):
+    # under backlog the window never shrinks below ``unit_window`` service
+    # times of the stage itself, and — whenever an arrival rate has been
+    # observed — below ``gap_window`` arrival gaps, so a batch always
+    # stays open long enough to catch the next upstream burst instead of
+    # flushing into a queue that cannot drain it any sooner
+    unit_window: float = 0.4       # window floor in stage unit costs
+    gap_window: float = 1.5        # window floor in observed arrival gaps
+    # economic idle rule: holding a batch open on an idle lane is worth
+    # one expected arrival gap of dead time when the NEXT member's
+    # amortization saving (unit x the cost model's fixed share) exceeds
+    # it — cheap stages still flush at once, expensive weight-streaming
+    # stages wait for their burst.  0 disables holding (always flush on
+    # idle, the pre-planner behavior).
+    hold_gain: float = 1.3
 
 
 class BatchPlanner:
@@ -97,6 +118,7 @@ class BatchPlanner:
         # realized-planning stats (summary() reports them)
         self.plans = 0
         self.throughput_mode = 0      # budget exhausted -> max batch
+        self.saturated_plans = 0      # queue-drain term engaged
         self.windows = StageStats()   # distribution of planned windows
         self.caps = StageStats()      # distribution of planned size caps
 
@@ -136,6 +158,52 @@ class BatchPlanner:
         self._tail[stage_name] = tail
         return tail
 
+    def service_path(self, speed_of=None) -> float:
+        """Pure-service end-to-end critical path: the max-cost stage
+        chain with every cost divided by ``speed_of(resource)`` — the
+        *current tier mix* half of the admission estimate (the other
+        half, live queue backlog, comes from the runtime).  Unlike the
+        realized span sketches this carries no queueing, so it neither
+        lags a building ramp nor stays sticky-high after one.
+        """
+        if speed_of is None:
+            speed_of = lambda resource: 1.0          # noqa: E731
+        memo: Dict[str, float] = {}                  # shared sub-chains
+
+        def chain(name: str) -> float:
+            v = memo.get(name)
+            if v is None:
+                s = self._stages[name]
+                v = s.cost / max(speed_of(s.resource), 1e-9) + \
+                    max((chain(d) for d in self._succ[name]), default=0.0)
+                memo[name] = v
+            return v
+        return chain(self.graph.source_stages[0].name)
+
+    def hold_when_idle(self, stage_name: str, slot: str,
+                       unit: float) -> bool:
+        """Economic idle rule: should a fresh batch stay open even though
+        a lane is free right now?
+
+        Flushing buys an immediate start; holding one expected arrival
+        gap buys the next member's amortization saving, ``unit x
+        fixed/(fixed+marginal)`` (the weight-streaming share a deeper
+        batch does not pay again).  Hold exactly when the saving (scaled
+        by ``hold_gain``) exceeds the expected wait — so cheap stages
+        still flush instantly on idle lanes while expensive
+        weight-streaming stages wait for their burst.  Without an
+        observed arrival rate there is nothing to wait for.
+        """
+        pol = self.policy
+        if pol.hold_gain <= 0.0 or unit <= 0.0:
+            return False
+        gap = self._gap.get((stage_name, slot))
+        if gap is None or gap <= 0.0:
+            return False
+        cm = self.cost_model
+        saving = unit * cm.fixed / (cm.fixed + cm.marginal)
+        return gap < pol.hold_gain * saving
+
     # -- the decision --------------------------------------------------------
 
     def plan(self, stage: Stage, slot: str, now: float,
@@ -163,15 +231,27 @@ class BatchPlanner:
         if deadline is not None:
             budget = (deadline - now - self.tail_after(stage.name)
                       - pol.slo_margin) * pol.headroom_safety
+        # queue-drain saturation check: per-lane backlog already holds
+        # several unit services, i.e. the queue has not been draining —
+        # the long-plateau regime where the deadline-headroom clamp below
+        # used to collapse the window to its minimum and strand the cap
+        # unfilled (the fig8 full-scale under-batching gap)
+        saturated = unit > 0.0 and pending >= pol.saturate_backlog * unit
         if budget <= cm.batch_seconds(unit, 1):
             # Deadline headroom is already gone (overload ate it upstream):
             # protecting this member is impossible, so maximize throughput
             # for everyone behind it — the regime where batching pays most.
             self.throughput_mode += 1
             cap = cm.max_batch
+            saturated = True
         elif gap is None or gap <= 0.0:
             # No arrival-rate signal yet: admit the full cap and let the
             # SLO/size/idle rules govern (first batches of a run).
+            cap = cm.max_batch
+        elif saturated:
+            # Still some headroom, but the queue can only grow: per-member
+            # latency is set by drain rate, not by this batch's formation
+            # wait, so run at the deepest amortization the tier admits.
             cap = cm.max_batch
         else:
             cap = cm.largest_within(unit, budget, wait_per_member=gap)
@@ -181,15 +261,32 @@ class BatchPlanner:
         # the observed arrival gap (long enough to catch the next firing)
         # and the backlogged compute seconds per lane (formation time the
         # batch could not have started in anyway).  Never longer than the
-        # headroom left after the planned batch's own service time.
+        # headroom left after the planned batch's own service time —
+        # EXCEPT under saturation, where that headroom is already spent
+        # and clamping by it would under-batch exactly when amortization
+        # pays most: there the window follows the backlog/fill signals
+        # alone (the size cap, not the timer, flushes in practice).
         if cap <= 1 or gap is None or gap <= 0.0:
             window = pol.min_window
         else:
             window = max(pol.gap_gain * gap, pol.pending_gain * pending)
-            if budget != float("inf"):
+            if saturated:
+                window = max(window, gap * (cap - 1))
+            elif budget != float("inf"):
                 window = min(window, max(
                     budget - cm.batch_seconds(unit, cap), pol.min_window))
+        # utilization floors: under backlog, flushing faster than the
+        # stage's own service time just lengthens the queue at a
+        # shallower batch depth; and a window shorter than the observed
+        # arrival cadence can never coalesce at all
+        if cap > 1 and unit > 0.0:
+            if pending > 0.0:
+                window = max(window, pol.unit_window * unit)
+            if gap is not None and gap > 0.0:
+                window = max(window, pol.gap_window * gap)
         window = min(max(window, pol.min_window), pol.max_window)
+        if saturated:
+            self.saturated_plans += 1
         self.windows.observe(window)
         self.caps.observe(float(cap))
         return window, cap
@@ -200,6 +297,7 @@ class BatchPlanner:
         out: Dict[str, float] = {
             "plans": self.plans,
             "throughput_mode_plans": self.throughput_mode,
+            "saturated_plans": self.saturated_plans,
         }
         if self.plans:
             out["planned_window_p50"] = self.windows.quantile(0.5)

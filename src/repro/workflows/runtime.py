@@ -41,9 +41,10 @@ from repro.core import (CascadeStore, HashPlacement, InstanceAffinity,
                         ReplicatedPlacement, instance_label, instance_of,
                         workflow_key)
 from repro.core.placement import PlacementPolicy
-from repro.runtime import (CLUSTER_NET, Compute, Get, NetProfile, Put,
-                           ReplicaScheduler, Runtime, Scheduler,
-                           ShardLocalScheduler, StageStats)
+from repro.runtime import (CLUSTER_NET, AutoScaler, AutoscalePolicy,
+                           Compute, Get, NetProfile, Put, ReplicaScheduler,
+                           Runtime, Scheduler, ShardLocalScheduler,
+                           StageStats)
 from repro.runtime.batching import BatchCostModel
 from .batching import BatchPolicy, StageBatcher
 from .graph import INSTANCE, Stage, WorkflowGraph
@@ -109,6 +110,9 @@ class InstanceTracker:
         # streaming aggregates over completed instances (the only record
         # of evicted ones; maintained regardless so both modes agree)
         self.e2e = StageStats()
+        # completion listeners (the autoscaler's pressure window): each
+        # gets every end-to-end span as it completes, O(1) per completion
+        self.e2e_sinks: List[Any] = []
         self.admitted = 0
         self.retired = 0
         self.completed_with_deadline = 0
@@ -147,6 +151,8 @@ class InstanceTracker:
                 rec.done.get(s, 0) >= n for s, n in self._sinks.items()):
             rec.t_complete = t1
             self.e2e.observe(t1 - rec.t_submit)
+            for sink in self.e2e_sinks:
+                sink(t1 - rec.t_submit)
             if rec.deadline is not None:
                 self.completed_with_deadline += 1
                 if t1 > rec.deadline:
@@ -245,7 +251,11 @@ class WorkflowRuntime:
                  adaptive_batching: bool = False,
                  adaptive_policy: Optional[AdaptiveBatchPolicy] = None,
                  evict_completed: bool = False,
-                 log_tasks: bool = True):
+                 log_tasks: bool = True,
+                 admission: Optional[str] = None,
+                 admission_margin: float = 0.0,
+                 admission_defer: float = 0.02,
+                 admission_max_defer: float = 0.2):
         if not graph._validated:
             graph.validate()
         batching = batching or adaptive_batching
@@ -253,6 +263,9 @@ class WorkflowRuntime:
             "gang_pin needs instance affinity (grouped=True)"
         assert not (batching and not graph.instance_tracking), \
             "batching needs synthesized (instance-tracked) stages"
+        assert admission in (None, "reject", "defer"), admission
+        assert not (admission and not graph.instance_tracking), \
+            "admission control needs an instance-tracked graph"
         self.graph = graph
         self.grouped = grouped
         self.placement = placement
@@ -264,16 +277,20 @@ class WorkflowRuntime:
 
         nodes: List[str] = []
         resources: Dict[str, Dict[str, int]] = {}
+        profiles: Dict[str, Any] = {}
         for tier in graph.tiers.values():
-            for n in tier.nodes:
+            # spares exist in the cluster (idle, outside every pool) so
+            # the autoscaler can grow onto them without rebuilding state
+            for n in tier.nodes + tier.spare_nodes:
                 nodes.append(n)
                 resources[n] = dict(tier.resources)
+                profiles[n] = tier.profile
         store = CascadeStore(nodes)
         store.cache_enabled = caching
 
         instance_pools: List[str] = []
         for pool in graph.pools:
-            tier = graph.tiers[pool.tier]
+            pool_nodes = graph.nodes_of(pool)
             regex = None
             fn = None
             if grouped and pool.affinity == INSTANCE:
@@ -281,11 +298,26 @@ class WorkflowRuntime:
                 instance_pools.append(pool.prefix)
             elif grouped and pool.affinity is not None:
                 regex = pool.affinity
-            store.create_object_pool(pool.prefix, tier.nodes, pool.shards,
-                                     replication=pool.replication,
-                                     affinity_set_regex=regex,
-                                     policy=self._make_policy(pool.shards),
-                                     affinity_fn=fn)
+            p = store.create_object_pool(pool.prefix, pool_nodes,
+                                         pool.shards,
+                                         replication=pool.replication,
+                                         affinity_set_regex=regex,
+                                         policy=self._make_policy(
+                                             pool.shards),
+                                         affinity_fn=fn)
+            # tier-aware placement: weight each slot by its members'
+            # throughput FOR THE WORK THIS POOL TRIGGERS (a CPU tier's
+            # gpu-speed 0.2 must not hide behind its cpu-speed 1.0 when
+            # the pool's stages are gpu-bound); uniform tiers leave the
+            # default 1.0 weights untouched — byte-stable
+            stage_res = {s.resource for s in graph.stages_on(pool.prefix)}
+            for shard in p.shards.values():
+                w = sum(max((profiles[n].speed_of(r) for r in stage_res),
+                            default=profiles[n].nominal_speed)
+                        for n in shard.nodes)
+                if shard.nodes and w != float(len(shard.nodes)):
+                    p.engine.set_capacity(shard.name,
+                                          w / len(shard.nodes))
         self._instance_pools = instance_pools
         if anchor_pool is None and instance_pools:
             anchor_pool = instance_pools[0]
@@ -306,7 +338,8 @@ class WorkflowRuntime:
             scheduler = (ReplicaScheduler(store) if read_replicas > 1
                          else ShardLocalScheduler())
         self.rt = Runtime(store, resources, net=net, scheduler=scheduler,
-                          seed=seed, log_tasks=log_tasks)
+                          seed=seed, log_tasks=log_tasks,
+                          node_profiles=profiles)
         self.store = store
         self.planner: Optional[BatchPlanner] = None
         self.batcher: Optional[StageBatcher] = None
@@ -328,13 +361,36 @@ class WorkflowRuntime:
                     self.rt.enable_migration(pool.prefix,
                                              interval=migrate_every)
 
+        # admission control (SAGA-style workflow-level gate): a deadline
+        # submission is admitted only if the planner's critical-path tail
+        # estimate on the current tier mix fits its headroom at the
+        # virtual admission instant; otherwise it is rejected outright
+        # ("reject") or re-checked ("defer") until headroom or feasibility
+        # runs out
+        self.admission = admission
+        self.admission_margin = admission_margin
+        self.admission_defer = admission_defer
+        self.admission_max_defer = admission_max_defer
+        self.admission_rejects = 0
+        self.admission_deferrals = 0
+        if admission is not None:
+            # the adaptive planner doubles as the estimator when present
+            # (one set of span sketches, one tail memo); otherwise a
+            # dedicated estimator-only planner reads the same tracker
+            self.admission_planner = self.planner or BatchPlanner(
+                graph, self.tracker,
+                cost_model=cost_model or BatchCostModel())
+        else:
+            self.admission_planner = None
+        self.autoscaler: Optional[AutoScaler] = None
+
         for stage in graph.stages:
             pool = graph.pool_of(stage.pool)
             task = (stage.body if not graph.instance_tracking
                     else self._make_task(stage))
             self.rt.register(stage.pool, task, order_of=stage.order_of,
                              resource=stage.resource,
-                             pool_nodes=graph.tiers[pool.tier].nodes,
+                             pool_nodes=graph.nodes_of(pool),
                              name=stage.name)
 
     def _make_policy(self, n_shards: int) -> PlacementPolicy:
@@ -404,15 +460,164 @@ class WorkflowRuntime:
         triggering put) picks one shard slot through the anchor pool's
         policy and pins the instance's label there in every
         instance-grouped pool — workflow-atomic placement.
+
+        With ``admission`` enabled and a deadline given, the submission
+        first passes the feasibility gate at its virtual arrival time:
+        if ``now + slot backlog + service critical path`` (priced on the
+        live tier mix) cannot fit the deadline, the instance is rejected
+        (or deferred and re-checked) instead of being admitted to miss.
         """
         assert self.graph.instance_tracking, \
             "submit() needs an instance-tracked graph"
         assert "_" not in instance and "/" not in instance, instance
+        if self.admission is not None and deadline is not None:
+            self.rt.sim.at(at, self._admission_check,
+                           (instance, at, value, size, at + deadline))
+            return
         if self.gang_pin:
             self.rt.sim.at(at, lambda: self._admit_pins(instance))
         self.tracker.admit(instance, at, deadline=deadline)
         key = workflow_key(self.graph.source_pool, instance, "event", 0)
         self.rt.client_put(at, key, value, size=size)
+
+    def _admission_backlog(self) -> float:
+        """Queue delay ahead of a fresh admission: the source pool's MEAN
+        per-lane admitted-but-unfinished compute seconds.  The span
+        sketches lag a *building* queue — they only see completions — so
+        this live term is what lets the gate say no while the ramp is
+        still steepening.  The mean (not the emptiest node) is
+        deliberate: admissions spread over every slot, and right after a
+        scale-out one fresh empty node would otherwise collapse the
+        estimate and admit a doomed wave before its queue materializes."""
+        names = self._active_source_nodes()
+        if not names:
+            return 0.0
+        return sum(self._node_backlog(self.rt.nodes[n])
+                   for n in names) / len(names)
+
+    def _active_source_nodes(self) -> List[str]:
+        """Member nodes of the source pool's ACTIVE slots.  The engine's
+        shard list is authoritative — ``pool.shards`` additionally
+        retains retired (drained) slots for straggler resolution, and
+        counting those would dilute the backlog mean with empty nodes
+        and price the service path at hardware that no longer serves."""
+        pool = self.store.pools[self.graph.source_pool]
+        return [n for s in pool.engine.shards
+                for n in pool.shards[s].nodes]
+
+    def _pinned_nodes(self, instance: str) -> List[str]:
+        """Member nodes of the slot ``instance`` is gang-pinned to."""
+        anchor = self.store.pools[self.anchor_pool]
+        return anchor.shards[
+            anchor.engine.home_of(instance_label(instance))].nodes
+
+    def _node_backlog(self, node) -> float:
+        worst = 0.0
+        for r, cap in node.capacity.items():
+            if cap and r != "nic":
+                pend = node.pending[r]
+                if self.batcher is not None:
+                    # work enrolled in still-forming batches is committed
+                    # but not yet in Node.pending — price it at this
+                    # node's rate so the gate can't be gamed by windows
+                    pend += self.batcher.forming_seconds(node.name, r) \
+                        / max(node.rate(r), 1e-9)
+                worst = max(worst, pend / cap)
+        return worst
+
+    def _nodes_backlog(self, names: List[str]) -> float:
+        """Per-lane committed compute seconds on a slot (least-loaded
+        member serves the gang, so take the min across members)."""
+        return min((self._node_backlog(self.rt.nodes[n]) for n in names),
+                   default=0.0)
+
+    def _min_active_speed(self, resource: str) -> float:
+        """Slowest service rate for ``resource`` among the source pool's
+        CURRENT member nodes — the conservative "current tier mix" speed
+        the admission estimate prices stage costs at (a scale-out onto a
+        slower tier immediately makes the gate more cautious)."""
+        speeds = [self.rt.nodes[n].rate(resource)
+                  for n in self._active_source_nodes()]
+        return min(speeds) if speeds else 1.0
+
+    def _admission_check(self, arg: Tuple) -> None:
+        instance, t_submit, value, size, deadline_abs = arg
+        now = self.rt.sim.now
+        # Feasibility on the live cluster: queue delay already committed
+        # plus the pure-service critical path at the current tier mix's
+        # speed.  Deliberately NOT the realized-span sketches: those lag
+        # a building ramp and stay sticky-high long after one drains.
+        # Under gang placement the
+        # check is per-slot — pin first, price the exact slot this
+        # workflow would join (its backlog, its hardware speed), and
+        # unpin if the answer is no — so a deep slow-tier slot rejects
+        # while a drained fast slot still admits.
+        if self.gang_pin:
+            self._admit_pins(instance)
+            nodes = self._pinned_nodes(instance)
+            est = (self._nodes_backlog(nodes)
+                   + self.admission_planner.service_path(
+                       lambda r: min(self.rt.nodes[n].rate(r)
+                                     for n in nodes)))
+        else:
+            est = (self._admission_backlog()
+                   + self.admission_planner.service_path(
+                       self._min_active_speed))
+        if now + est + self.admission_margin <= deadline_abs:
+            self.tracker.admit(instance, now,
+                               deadline=deadline_abs - now)
+            key = workflow_key(self.graph.source_pool, instance,
+                               "event", 0)
+            self.rt.client_put(now, key, value, size=size)
+            return
+        if self.gang_pin:
+            # roll the trial placement back completely (forget, not just
+            # unpin): a deferral retry must re-rank slots from scratch so
+            # it can see capacity the autoscaler added in the meantime
+            label = instance_label(instance)
+            for prefix in self._instance_pools:
+                self.store.pools[prefix].engine.forget(label)
+        retry_at = now + self.admission_defer
+        if self.admission == "defer" and \
+                retry_at <= t_submit + self.admission_max_defer and \
+                retry_at < deadline_abs:
+            self.admission_deferrals += 1
+            self.rt.sim.at(retry_at, self._admission_check, arg)
+            return
+        self.admission_rejects += 1
+        if self.autoscaler is not None:
+            self.autoscaler.observe_reject()   # shed demand = pressure
+
+    def enable_autoscale(self, slo: float,
+                         policy: Optional[AutoscalePolicy] = None,
+                         pools: Optional[List[str]] = None,
+                         spares: Optional[List[str]] = None) -> AutoScaler:
+        """Attach an SLO-pressure :class:`repro.runtime.AutoScaler` to the
+        workflow's instance pools and start it ticking inside the DES.
+
+        The scaler reshards every instance pool in lockstep (preserving
+        the gang-pin equal-slot invariant), consumes spare nodes declared
+        on the pools' tiers (``Tier.spares``), and reads its latency
+        pressure from this runtime's completion stream.  With no explicit
+        ``policy`` the pool's current slot count becomes the scale-in
+        floor.
+        """
+        pools = pools or list(self._instance_pools)
+        assert pools, "autoscaling needs at least one instance pool"
+        if spares is None:
+            spares, seen = [], set()
+            for prefix in pools:
+                for t in self.graph.pool_of(prefix).tiers:
+                    if t not in seen:
+                        seen.add(t)
+                        spares.extend(self.graph.tiers[t].spare_nodes)
+        if policy is None:
+            policy = AutoscalePolicy(
+                min_shards=len(self.store.pools[pools[0]].engine.shards))
+        scaler = AutoScaler(self.rt, pools, spares, slo, policy=policy)
+        self.tracker.e2e_sinks.append(scaler.observe_latency)
+        self.autoscaler = scaler
+        return scaler.start()
 
     def _admit_pins(self, instance: str) -> None:
         label = instance_label(instance)
@@ -444,4 +649,10 @@ class WorkflowRuntime:
         )
         if self.batcher is not None:
             out.update(self.batcher.summary())
+        if self.admission is not None:
+            out["admission_rejects"] = self.admission_rejects
+            out["admission_deferrals"] = self.admission_deferrals
+        if self.autoscaler is not None:
+            out["scale_events"] = len(self.autoscaler.decisions)
+            out["node_seconds"] = round(self.autoscaler.node_seconds(), 4)
         return out

@@ -267,8 +267,40 @@ def test_planner_window_clamped_to_policy_bounds():
         p.note_arrival("generate", "s0", i * 0.010)
     w, _ = p.plan(gen, "s0", 0.06, deadline=None, pending=10.0)
     assert w == 0.010
-    w, _ = p.plan(gen, "s0", 0.06, deadline=None, pending=0.0)
+    # no arrival signal on a fresh slot: nothing to wait for -> min clamp
+    w, _ = p.plan(gen, "s1", 0.06, deadline=None, pending=0.0)
     assert w == 0.001
+
+
+def test_planner_gap_window_floor_catches_next_arrival():
+    """With an observed cadence, the window never closes faster than
+    ``gap_window`` arrival gaps — a batch that flushes between bursts
+    can never coalesce (the sustained-overload fix)."""
+    p, g = _planner(min_window=0.0005)
+    gen = next(s for s in g.stages if s.name == "generate")
+    for i in range(6):
+        p.note_arrival("generate", "s0", i * 0.010)
+    w, _ = p.plan(gen, "s0", 0.06, deadline=None, pending=0.0)
+    assert w == pytest.approx(p.policy.gap_window * 0.010)
+    # backlog additionally floors by unit_window service times
+    w, _ = p.plan(gen, "s0", 0.06, deadline=None, pending=1e-4)
+    assert w >= p.policy.unit_window * gen.cost
+
+
+def test_planner_economic_idle_hold():
+    """Holding an idle lane is worth it iff the next member's
+    amortization saving (unit x fixed share) beats the expected gap."""
+    p, g = _planner()
+    gen = next(s for s in g.stages if s.name == "generate")    # 30ms
+    rer = next(s for s in g.stages if s.name == "rerank")      # 8ms
+    assert not p.hold_when_idle("generate", "s0", gen.cost)    # no signal
+    for i in range(6):
+        p.note_arrival("generate", "s0", i * 0.010)
+        p.note_arrival("rerank", "s0", i * 0.010)
+    # fixed share 0.65: generate saves ~19.5ms/member > 10ms gap -> hold;
+    # rerank saves ~5.2ms < 10ms gap -> flush
+    assert p.hold_when_idle("generate", "s0", gen.cost)
+    assert not p.hold_when_idle("rerank", "s0", rer.cost)
 
 
 def test_node_load_prefers_free_lanes_then_shallow_queues():

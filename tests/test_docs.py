@@ -15,6 +15,7 @@ API_DOC = DOCS / "affinity_api.md"
 ARCH_DOC = DOCS / "architecture.md"
 WORKFLOWS_DOC = DOCS / "workflows.md"
 BATCHING_DOC = DOCS / "batching.md"
+ELASTICITY_DOC = DOCS / "elasticity.md"
 
 
 def fenced_python_blocks(text: str):
@@ -49,10 +50,11 @@ def test_docs_exist():
     assert ARCH_DOC.exists()
     assert WORKFLOWS_DOC.exists()
     assert BATCHING_DOC.exists()
+    assert ELASTICITY_DOC.exists()
 
 
 @pytest.mark.parametrize("doc", [API_DOC, ARCH_DOC, WORKFLOWS_DOC,
-                                 BATCHING_DOC])
+                                 BATCHING_DOC, ELASTICITY_DOC])
 def test_all_qualified_names_resolve(doc):
     names = qualified_names(doc.read_text())
     assert names, f"{doc.name} should document qualified repro.* symbols"
@@ -67,7 +69,8 @@ def test_all_qualified_names_resolve(doc):
 
 @pytest.mark.parametrize(
     "doc_idx_snippet",
-    [(doc, i, snip) for doc in (API_DOC, WORKFLOWS_DOC, BATCHING_DOC)
+    [(doc, i, snip) for doc in (API_DOC, WORKFLOWS_DOC, BATCHING_DOC,
+                                ELASTICITY_DOC)
      for i, snip in enumerate(fenced_python_blocks(doc.read_text()))],
     ids=lambda p: f"{p[0].stem}-snippet{p[1]}")
 def test_doc_snippets_run(doc_idx_snippet):

@@ -1,0 +1,272 @@
+"""Heterogeneous backend tiers, SLO-driven elastic scaling, and workflow
+admission control (the fig10 subsystem)."""
+import pytest
+
+from repro.core import CascadeStore, LoadAwarePlacement
+from repro.runtime import (CPU_POOL, GPU_A100, GPU_H100, UNIFORM,
+                           AutoScaler, AutoscalePolicy, Compute,
+                           HardwareProfile, Node, Runtime,
+                           ShardLocalScheduler, node_load)
+from repro.workflows import (Emit, WorkflowGraph, WorkflowRuntime,
+                             mode_kwargs)
+
+RES = {"gpu": 1, "cpu": 2, "nic": 2}
+
+
+def _graph(fast=2, spares=2, cost=0.01, fast_profile=GPU_H100,
+           spare_profile=GPU_A100):
+    g = WorkflowGraph("elastic")
+    g.add_tier("fast", fast, RES, profile=fast_profile)
+    g.add_tier("slow", 0, RES, profile=spare_profile, spares=spares)
+    for p in ("/in", "/out"):
+        g.add_pool(p, tier=("fast", "slow"), shards=fast)
+    g.add_stage("work", pool="/in", resource="gpu", cost=cost,
+                emits=[Emit("/out", fanout=1, size=1024)], sink=True)
+    return g.validate()
+
+
+# -- hardware profiles --------------------------------------------------------
+
+def test_profile_scales_compute_per_resource():
+    store = CascadeStore(["f0", "c0"])
+    store.create_object_pool("/x", store.nodes, 2,
+                             affinity_set_regex=r"/[a-z0-9]+_")
+    rt = Runtime(store, node_profiles={"f0": GPU_H100, "c0": CPU_POOL})
+    done = {}
+
+    def task(ctx, key, value):
+        t0 = ctx.now
+        yield Compute("gpu", 0.010)
+        done[ctx.node] = ctx.now - t0
+
+    rt.register("/x", task)
+    picked = {}
+    for g in range(32):                     # one key homed on each node
+        picked.setdefault(store.shard_of(f"/x/g{g}_0").nodes[0],
+                          f"/x/g{g}_0")
+        if len(picked) == 2:
+            break
+    for key in picked.values():
+        rt.client_put(0.0, key, size=0)
+    rt.run()
+    assert done["f0"] == pytest.approx(0.010 / 2.0)   # H100: gpu 2x
+    assert done["c0"] == pytest.approx(0.010 / 0.2)   # CPU pool: gpu 0.2x
+
+
+def test_uniform_profile_is_the_identity():
+    n = Node("n", dict(RES))
+    assert n.profile is UNIFORM
+    assert n.rate("gpu") == 1.0 and n.rate("cpu") == 1.0
+    assert UNIFORM.cost_model() is None
+    assert GPU_H100.cost_model().max_batch == 32
+
+
+def test_node_load_normalizes_by_tier_throughput():
+    """Satellite case: fast tier busy -> spill prefers the idle slow tier
+    over the queued fast tier; but a fast node's QUEUE still beats a slow
+    node's equally deep one (it drains sooner)."""
+    fast = Node("f", {"gpu": 1}, profile=GPU_H100)       # gpu speed 2.0
+    slow = Node("s", {"gpu": 1}, profile=GPU_A100)       # gpu speed 1.0
+    # both idle: dead heat at 0 — occupancy 0 is free at any speed
+    assert node_load(fast, "gpu") == node_load(slow, "gpu") == 0.0
+    # fast busy (no queue) vs idle slow: idle slow wins
+    fast.in_use["gpu"] = 1
+    assert node_load(slow, "gpu") < node_load(fast, "gpu")
+    # fast busy+queued vs idle slow: idle slow still wins
+    fast.queues["gpu"].append((0.0, lambda: None))
+    assert node_load(slow, "gpu") < node_load(fast, "gpu")
+    # equally queued: the fast tier drains its backlog in half the time
+    slow.in_use["gpu"] = 1
+    slow.queues["gpu"].append((0.0, lambda: None))
+    assert node_load(fast, "gpu") < node_load(slow, "gpu")
+    # homogeneous special case: exactly the raw fractional occupancy
+    plain = Node("p", {"gpu": 2})
+    plain.in_use["gpu"] = 1
+    assert node_load(plain, "gpu") == 0.5
+
+
+def test_pick_batch_spills_to_idle_slow_tier():
+    """Satellite case at the scheduler level: a shard spanning tiers
+    dispatches a batch to the idle slow member, not the queued fast one."""
+    nodes = {"f0": Node("f0", dict(RES), profile=GPU_H100),
+             "s0": Node("s0", dict(RES), profile=GPU_A100)}
+    nodes["f0"].in_use["gpu"] = 1
+    nodes["f0"].queues["gpu"].append((0.0, lambda: None))
+
+    class TwoTierShard:
+        name = "/x#s0"
+        nodes = ["f0", "s0"]
+
+    sched = ShardLocalScheduler()
+    pick = sched.pick_batch(TwoTierShard(), ["/x/a_0"], nodes,
+                            ["f0", "s0"], resource="gpu")
+    assert pick == "s0"
+
+
+def test_load_aware_capacity_weights_fill_fast_shards_more():
+    pol = LoadAwarePlacement()
+    pol.set_capacity("fast", 2.0)
+    shards = ["fast", "slow"]
+    counts = {"fast": 0, "slow": 0}
+    for i in range(30):
+        counts[pol.place(f"g{i}", shards)] += 1
+    # 2x the weight -> ~2x the groups before looking equally full
+    assert counts["fast"] == pytest.approx(20, abs=1)
+
+
+# -- the scaler ---------------------------------------------------------------
+
+def _scaled_runtime(n=3, spares=2):
+    store = CascadeStore([f"n{i}" for i in range(n)]
+                         + [f"sp{i}" for i in range(spares)])
+    store.create_object_pool("/x", [f"n{i}" for i in range(n)], n,
+                             affinity_set_regex=r"/[a-z0-9]+_")
+    rt = Runtime(store)
+    for g in range(30):
+        store.put(f"/x/g{g}_0", b"d" * 100, fire=False)
+    return rt, store
+
+
+def test_scale_in_returns_node_to_spare_no_leak():
+    """Regression for the pre-rewrite leak: out -> in -> out must work
+    forever because scale-in RETURNS the slot's node to the spare list."""
+    rt, store = _scaled_runtime(n=3, spares=1)
+    sc = AutoScaler(rt, ["/x"], spare_nodes=["sp0"], slo=0.1,
+                    policy=AutoscalePolicy(min_shards=1))
+    sc._observed = 1
+    for _ in range(3):                       # out -> in cycles
+        sc.force(4)
+        assert sc.spare == []
+        sc.force(3)
+        assert len(sc.spare) == 1
+    # every object still reachable after all that churn
+    for g in range(30):
+        assert store.get(f"/x/g{g}_0")[0] is not None
+
+
+def test_scaler_migration_charges_bytes():
+    rt, store = _scaled_runtime()
+    sc = AutoScaler(rt, ["/x"], spare_nodes=["sp0", "sp1"], slo=0.1)
+    d = sc.force(4)
+    assert d.bytes_moved > 0 and d.groups_moved > 0
+    assert store.stats.bytes_migrated == d.bytes_moved
+    rt.run()                                 # drain the charged transfers
+    assert rt.sim.metrics["background_xfer_s"]
+
+
+def test_pressure_prefers_worst_signal():
+    rt, _ = _scaled_runtime()
+    sc = AutoScaler(rt, ["/x"], spare_nodes=["sp0"], slo=0.1,
+                    policy=AutoscalePolicy(min_samples=2))
+    for _ in range(4):
+        sc.observe_latency(0.25)             # 2.5x the SLO
+    p, signal = sc.pressure()
+    assert p == pytest.approx(2.5, rel=0.05) and signal == "p95"
+    rt.nodes["n0"].pending["gpu"] = 0.5      # 5x the SLO in backlog
+    p, signal = sc.pressure()
+    assert p == pytest.approx(5.0, rel=0.05) and signal == "backlog"
+    sc.observe_reject()
+    p, signal = sc.pressure()                # backlog still dominates
+    assert signal == "backlog"
+
+
+def test_rejects_alone_raise_pressure():
+    rt, _ = _scaled_runtime()
+    sc = AutoScaler(rt, ["/x"], spare_nodes=["sp0"], slo=0.1)
+    assert sc.pressure()[0] == 0.0
+    sc.observe_reject()
+    p, signal = sc.pressure()
+    assert p >= sc.policy.high_pressure and signal == "rejects"
+
+
+def test_workflow_autoscale_end_to_end_slo_pressure():
+    """Overload an elastic workflow: the in-sim controller must scale out
+    onto the spare tier, keep every pool's slot count in lockstep, and
+    scale back in by the end of the drain."""
+    wrt = WorkflowRuntime(_graph(fast=2, spares=2, cost=0.02),
+                          **mode_kwargs("atomic+abatch"))
+    sc = wrt.enable_autoscale(
+        slo=0.08, policy=AutoscalePolicy(interval=0.02, min_samples=4,
+                                         min_shards=2))
+    # a burst well past the 2-slot capacity, then a light steady tail
+    # whose in-SLO completions let the controller settle back down
+    for i in range(400):
+        wrt.submit(f"i{i}", at=0.01 + i / 1600.0, deadline=0.08)
+    for i in range(100):
+        wrt.submit(f"t{i}", at=2.0 + i / 100.0, deadline=0.08)
+    wrt.run()
+    assert any(d.new_shards > d.old_shards for d in sc.decisions)
+    assert any(d.new_shards < d.old_shards for d in sc.decisions)
+    counts = {p: len(wrt.store.pools[p].engine.shards)
+              for p in ("/in", "/out")}
+    assert len(set(counts.values())) == 1          # lockstep pools
+    assert sc._n_active() + len(sc.spare) == 4     # capacity conserved
+    assert wrt.summary()["n"] == 500               # nothing lost
+
+
+# -- admission control --------------------------------------------------------
+
+def test_admission_rejects_infeasible_deadline():
+    wrt = WorkflowRuntime(_graph(cost=0.02), admission="reject",
+                          **mode_kwargs("atomic"))
+    wrt.submit("ok", at=0.0, deadline=1.0)       # plenty of headroom
+    wrt.submit("doomed", at=0.0, deadline=0.001)  # < service path
+    wrt.run()
+    s = wrt.summary()
+    assert s["admission_rejects"] == 1
+    assert s["n"] == 1 and s.get("slo_misses", 0) == 0
+    assert "doomed" not in wrt.tracker.records
+
+
+def test_admission_gate_bounds_queue_misses():
+    """Saturate a tiny cluster: without the gate late completions pile
+    up; with it, every admitted instance still meets its deadline and the
+    overflow is rejected instead of served late."""
+    def drive(**kw):
+        wrt = WorkflowRuntime(_graph(fast=2, spares=0, cost=0.02),
+                              **dict(mode_kwargs("atomic+abatch"), **kw))
+        for i in range(150):
+            wrt.submit(f"i{i}", at=0.01 + i / 2000.0, deadline=0.10)
+        wrt.run()
+        return wrt.summary()
+
+    ungated = drive()
+    gated = drive(admission="reject", admission_margin=0.03)
+    assert ungated.get("slo_misses", 0) > 10
+    assert gated.get("slo_misses", 0) == 0
+    assert gated["admission_rejects"] > 0
+    assert gated["n"] + gated["admission_rejects"] == 150
+
+
+def test_admission_defer_admits_when_scaler_adds_capacity():
+    """Deferral pays off exactly when the cluster can CHANGE under the
+    waiting request: with fixed capacity, clock time and queue drain
+    cancel out (est + now is invariant), but a scale-out adds an empty
+    slot the retry re-places onto — converting a would-be reject into a
+    served request (the forget-on-rollback path)."""
+    wrt = WorkflowRuntime(_graph(fast=1, spares=1, cost=0.02),
+                          admission="defer", admission_defer=0.02,
+                          admission_max_defer=0.5,
+                          **mode_kwargs("atomic"))
+    sc = wrt.enable_autoscale(
+        slo=0.2, policy=AutoscalePolicy(interval=0.02, min_samples=2,
+                                        min_shards=1))
+    for i in range(30):
+        wrt.submit(f"w{i}", at=0.0)                   # no deadline: admit
+    wrt.submit("d", at=0.001, deadline=0.3)
+    wrt.run()
+    s = wrt.summary()
+    assert any(d.new_shards > d.old_shards for d in sc.decisions)
+    assert s["admission_deferrals"] > 0
+    assert s["admission_rejects"] == 0
+    assert wrt.tracker.records["d"].t_complete is not None
+    assert not wrt.tracker.records["d"].missed_deadline
+
+
+def test_hardware_profile_cost_model_prices_tiers_differently():
+    h, c = GPU_H100.cost_model(), CPU_POOL.cost_model()
+    # H100 amortizes deeply; the CPU pool barely at all
+    assert h.batch_seconds(1.0, 8) < c.batch_seconds(1.0, 8)
+    assert h.speedup(8) > 2.5 > c.speedup(8)
+    # drain_rate is the planner's capacity side: items/s at depth n
+    assert h.drain_rate(0.01, 8) > h.drain_rate(0.01, 1)

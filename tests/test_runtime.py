@@ -149,13 +149,16 @@ def test_autoscaler_scales_out_and_migrates():
     rt = Runtime(store)
     for g in range(30):
         store.put(f"/x/g{g}_0", b"d" * 100, fire=False)
-    sc = AutoScaler(rt, "/x", spare_nodes=["spare0"], high_watermark=1)
-    # force high queue depth
-    rt.nodes["n0"].queues["gpu"].extend([(0.0, lambda: None)] * 5)
+    sc = AutoScaler(rt, ["/x"], spare_nodes=["spare0"], slo=0.1)
+    # backlog pressure: one slo worth of admitted-but-unfinished compute
+    rt.nodes["n0"].pending["gpu"] = 0.5
     dec = sc.evaluate()
     assert dec is not None and dec.new_shards == 4
-    plan = sc.apply(dec)
+    dec = sc.apply(dec)
     assert len(store.pools["/x"].shards) == 4
+    assert sc.spare == []
+    # migration was charged, not free
+    assert store.stats.bytes_migrated == dec.bytes_moved > 0
     # all objects still reachable at their (new) homes
     for g in range(30):
         rec, _ = store.get(f"/x/g{g}_0")

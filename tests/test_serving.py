@@ -111,3 +111,77 @@ def test_adapter_affinity_fetches_once(model_and_params):
         eng.turn(sid, [1, 2], gen_tokens=2)
     # all sessions share the adapter's affinity key -> one row, one fetch
     assert eng.adapters.fetches == 1
+
+
+def _same_row_sids(router, k):
+    """First ``k`` session ids the affinity policy homes on one row."""
+    from repro.serving.sessions import Session
+    buckets = {}
+    for i in range(200):
+        sid = f"sess{i}"
+        r = router.route(Session(sid=sid), f"{sid}:0")
+        buckets.setdefault(r, []).append(sid)
+        if len(buckets[r]) == k:
+            return r, buckets[r]
+    raise AssertionError("no row collected k sessions")
+
+
+def test_row_overflow_spills_to_best_free_row(model_and_params):
+    """The row scheduler's overflow-spill path: a session whose affinity
+    row is full must land on the best-signal row WITH a free slot instead
+    of asserting on the full one."""
+    cfg, model, params = model_and_params
+    eng = ServingEngine(model, params, n_rows=2, max_slots=2, max_seq=64,
+                        policy="affinity")
+    home, sids = _same_row_sids(eng.router, 3)
+    # occupy both slots of the affinity row
+    for sid in sids[:2]:
+        eng.open_session(sid)
+        _, m = eng.turn(sid, [1], gen_tokens=1)
+        assert m.row == home
+    eng.open_session(sids[2])                   # same home row, now full
+    _, m2 = eng.turn(sids[2], [1], gen_tokens=1)
+    assert m2.row != home                       # spilled, not crashed
+    assert eng.rows[m2.row].load() == 1
+
+
+def test_row_overflow_spill_prefers_emptier_row(model_and_params):
+    """With several spill candidates, the row scheduler's (free-lane,
+    backlog, load) signal picks the least-loaded one."""
+    cfg, model, params = model_and_params
+    eng = ServingEngine(model, params, n_rows=3, max_slots=2, max_seq=64,
+                        policy="affinity")
+    home, sids = _same_row_sids(eng.router, 3)
+    for sid in sids[:2]:
+        eng.open_session(sid)
+        eng.turn(sid, [1], gen_tokens=1)
+    # make one non-home row busier than the other
+    others = [i for i in range(3) if i != home]
+    eng.rows[others[0]].busy_until = 10.0
+    eng.open_session(sids[2])
+    _, m = eng.turn(sids[2], [1], gen_tokens=1, now=0.5)
+    assert m.row == others[1]
+
+
+def test_heterogeneous_rows_price_decode_by_tier(model_and_params):
+    """A faster row profile yields cheaper virtual decode time; the
+    uniform default stays byte-identical to the pre-tier engine."""
+    from repro.runtime import GPU_H100, UNIFORM
+    cfg, model, params = model_and_params
+    base = ServingEngine(model, params, n_rows=2, max_slots=2, max_seq=64,
+                         policy="affinity")
+    fast = ServingEngine(model, params, n_rows=2, max_slots=2, max_seq=64,
+                         policy="affinity",
+                         row_profiles=[GPU_H100, GPU_H100])
+    # calibration is per-engine; pin identical service times for fairness
+    fast._svc = dict(base._svc)
+    uni = ServingEngine(model, params, n_rows=2, max_slots=2, max_seq=64,
+                        policy="affinity", row_profiles=[UNIFORM])
+    uni._svc = dict(base._svc)
+    for eng in (base, fast, uni):
+        eng.open_session("s0")
+    _, mb = base.turn("s0", [1, 2], gen_tokens=4)
+    _, mf = fast.turn("s0", [1, 2], gen_tokens=4)
+    _, mu = uni.turn("s0", [1, 2], gen_tokens=4)
+    assert mf.decode_time < mb.decode_time      # 2x gpu speed
+    assert mu.decode_time == mb.decode_time     # uniform == identity
