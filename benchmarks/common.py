@@ -93,6 +93,13 @@ def load_bench_json(suite: str):
 DELTA_METRICS = {"p50_ms": 0.05, "p99_ms": 0.05, "slo_miss": 0.0,
                  "wall_s": 0.5}
 
+# suite-specific thresholds layered on the defaults: fig11's chaos
+# counters are hard floors — a single lost instance, or late completions
+# creeping past 10%, is a fault-tolerance regression worth a warn line
+SUITE_DELTA_METRICS = {
+    "fig11": {**DELTA_METRICS, "lost": 0.0, "late_completions": 0.10},
+}
+
 
 def bench_deltas(suite: str, prior, rows, metrics=None):
     """Per-metric regression lines of a fresh run vs the prior record.
@@ -105,7 +112,7 @@ def bench_deltas(suite: str, prior, rows, metrics=None):
     """
     if not prior:
         return []
-    thresholds = metrics or DELTA_METRICS
+    thresholds = metrics or SUITE_DELTA_METRICS.get(suite, DELTA_METRICS)
     old = {r["name"]: r for r in prior.get("rows", ())}
     out = []
     compared = 0

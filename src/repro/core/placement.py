@@ -299,6 +299,12 @@ class PlacementEngine:
         self._home_cache.pop(label, None)
         self._replica_cache.pop(label, None)
 
+    def pinned_labels(self, shards: Sequence[str]) -> List[str]:
+        """Labels currently pinned to any of ``shards``, in pin order —
+        the gangs stranded when those slots retire or their nodes die."""
+        ss = set(shards)
+        return [lbl for lbl, sh in self.pins.items() if sh in ss]
+
     def forget(self, label: str) -> None:
         """Unpin AND drop any sticky policy binding for ``label`` — the
         next ``home_of`` re-runs placement from scratch (used when an

@@ -8,8 +8,10 @@ from .scheduler import (LeastLoadedScheduler, RandomScheduler,
                         ReplicaScheduler, Scheduler, ShardLocalScheduler,
                         node_load)
 from .executor import Runtime, TaskContext
-from .faults import FaultInjector, set_straggler
-from .autoscale import AutoScaler, AutoscalePolicy, ScaleDecision
+from .faults import (AvailabilityReport, FailureEvent, FaultInjector,
+                     set_straggler)
+from .autoscale import (AutoScaler, AutoscalePolicy, ScaleDecision,
+                        replace_gang_pins)
 
 __all__ = [
     "AZURE_NET", "CLUSTER_NET", "BatchCompute", "Compute", "Get",
@@ -21,6 +23,6 @@ __all__ = [
     "LeastLoadedScheduler", "RandomScheduler", "ReplicaScheduler",
     "Scheduler", "ShardLocalScheduler", "node_load",
     "Runtime", "TaskContext",
-    "FaultInjector", "set_straggler",
-    "AutoScaler", "AutoscalePolicy", "ScaleDecision",
+    "AvailabilityReport", "FailureEvent", "FaultInjector", "set_straggler",
+    "AutoScaler", "AutoscalePolicy", "ScaleDecision", "replace_gang_pins",
 ]

@@ -42,12 +42,16 @@ class AutoscalePolicy:
     """Controller gains/bounds — one instance serves every load level.
 
     ``interval`` is the controller period in sim seconds; pressure is
-    ``max(latency_q / slo, backlog_seconds / slo, reject-shed)`` where
+    ``max(latency_q / slo, backlog_seconds / slo, reject-shed,
+    down-fraction)`` where
     ``latency_q`` is the window sketch's ``slo_quantile``,
     ``backlog_seconds`` the worst member node's admitted-but-unfinished
     compute per lane (the signal that still moves when overload stalls
-    completions entirely), and reject-shed the admission gate's turned-
-    away demand.  Scale out above ``high_pressure`` with spares
+    completions entirely), reject-shed the admission gate's turned-
+    away demand, and down-fraction a saturating term for member nodes
+    currently marked down (an outage is capacity shortfall before its
+    backlog ever reaches the latency sketch).  Scale out above
+    ``high_pressure`` with spares
     available — by up to ``max_step`` slots when pressure is a multiple
     of the threshold — and in below ``low_pressure``.  Cooldowns are
     asymmetric (``cooldown_out`` < ``cooldown_in``): capacity shortfall
@@ -64,6 +68,33 @@ class AutoscalePolicy:
     max_step: int = 2              # largest one-decision scale-out
     min_shards: int = 1
     backlog_weight: float = 1.0
+
+
+def replace_gang_pins(store, pools: Sequence[str], labels: Sequence[str],
+                      survivors: Sequence[str]) -> Dict[str, int]:
+    """Re-pin ``labels`` to one surviving slot each, in every lockstep pool.
+
+    The workflow-atomic move shared by slot retirement (scale-in) and node
+    death: the ANCHOR pool's policy picks a destination among
+    ``survivors`` (anchor-pool shard names), and the same slot INDEX is
+    pinned in every pool so a gang never straddles slots mid-flight.
+    Existing pins on the labels are dropped first; object migration is the
+    caller's business (the scaler's re-home pass, the fault path's
+    stranded-object move).  Returns label -> destination slot index.
+    """
+    anchor = store.pools[pools[0]].engine
+    for lbl in labels:
+        anchor.unpin(lbl)
+    placed: Dict[str, int] = {}
+    survivors = list(survivors)
+    for lbl in labels:
+        dst = anchor.policy.place(lbl, survivors)
+        idx = anchor.shards.index(dst)
+        for prefix in pools:
+            eng = store.pools[prefix].engine
+            eng.pin(lbl, eng.shards[idx])
+        placed[lbl] = idx
+    return placed
 
 
 @dataclasses.dataclass
@@ -196,6 +227,10 @@ class AutoScaler:
         if self._window.count >= pol.min_samples:
             lat = self._window.quantile(pol.slo_quantile) / self.slo
         backlog = self.backlog_seconds() / self.slo * pol.backlog_weight
+        if backlog > lat:
+            p, signal = backlog, "backlog"
+        else:
+            p, signal = lat, f"p{round(pol.slo_quantile * 100)}"
         if self._window_rejects:
             # shed demand saturates the signal (see observe_reject);
             # magnitude grows with the shed fraction so sustained heavy
@@ -203,11 +238,19 @@ class AutoScaler:
             shed = self._window_rejects / max(
                 self._window.count + self._window_rejects, 1)
             rej = pol.high_pressure * (1.0 + shed)
-            if rej > max(lat, backlog):
-                return rej, "rejects"
-        if backlog > lat:
-            return backlog, "backlog"
-        return lat, f"p{round(pol.slo_quantile * 100)}"
+            if rej > p:
+                p, signal = rej, "rejects"
+        active = self._active_nodes()
+        down = sum(1 for n in active if not self.rt.nodes[n].up)
+        if down:
+            # a dead member is capacity shortfall NOW, before its backlog
+            # shows in latency: saturate the signal like rejects do, scaled
+            # by the fraction of the fleet that is gone so multi-node
+            # outages keep scaling through consecutive cooldowns
+            dp = pol.high_pressure * (1.0 + down / max(len(active), 1))
+            if dp > p:
+                p, signal = dp, "down"
+        return p, signal
 
     # -- the controller -----------------------------------------------------
 
@@ -303,18 +346,9 @@ class AutoScaler:
         # there as ordinary charged migrations.
         if not grow:
             anchor = store.pools[self.pools[0]].engine
-            retiring_set = set(anchor.shards[-delta:])
-            stranded = [lbl for lbl, sh in anchor.pins.items()
-                        if sh in retiring_set]
-            for lbl in stranded:
-                anchor.unpin(lbl)
-            survivors = anchor.shards[:-delta]
-            for lbl in stranded:
-                idx = survivors.index(
-                    anchor.policy.place(lbl, survivors))
-                for prefix in self.pools:
-                    eng = store.pools[prefix].engine
-                    eng.pin(lbl, eng.shards[idx])
+            stranded = anchor.pinned_labels(anchor.shards[-delta:])
+            replace_gang_pins(store, self.pools, stranded,
+                              anchor.shards[:-delta])
         for prefix in self.pools:
             pool = store.pools[prefix]
             # snapshot current homes (dedup replays: key -> (shard, rec))

@@ -1,70 +1,125 @@
 """Fault injection + tolerance: node failures, shard failover, stragglers.
 
 Failure semantics mirror a replicated Cascade deployment:
-  * when a node dies, its queued tasks are re-dispatched to surviving shard
-    members (replication >= 2) or stall until recovery (replication == 1 —
-    objects are memory-resident, so an unreplicated shard is unavailable);
-  * stragglers are modeled as per-node service-speed multipliers; hedged
-    execution re-issues a task to a second shard member when it has waited
-    in queue beyond `hedge_after` seconds, first completion wins.
+  * when a node dies, compute admissions still queued on it are
+    re-dispatched to a surviving shard member (replication >= 2) or stall
+    until recovery (replication == 1 — objects are memory-resident, so an
+    unreplicated shard is unavailable);
+  * work already in service when the node dies drains in place: the paper's
+    deployments fail nodes out of *scheduling*, they do not model losing
+    in-flight kernels, and this keeps lane accounting exact;
+  * recovery re-admits the stalled queue through the normal release
+    accounting (``Simulator.kick``) and then notifies listeners;
+  * stragglers are modeled as per-node service-speed multipliers.
+
+The injector is deliberately layer-blind: it only flips ``Node.up`` and
+moves typed queue entries.  Higher layers subscribe via ``on_down`` /
+``on_up`` to react in their own vocabulary — the workflow runtime re-pins
+stranded gangs and migrates their objects, the autoscaler reads the down
+fraction as SLO pressure, the stage batcher hedges batches stuck behind a
+dead or straggling slot.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional
 
 from .executor import Runtime
-from .simulation import Node
+from .simulation import _ComputeStart
 
 
 @dataclasses.dataclass
 class FailureEvent:
+    """One scheduled down/up cycle, with per-event outcome counters.
+
+    ``failed_over`` counts queued compute admissions re-dispatched to a
+    surviving replica at down time; ``stalled`` counts entries that had no
+    replica to go to and waited out the outage in place.
+    """
     node: str
     t_down: float
     t_up: float
+    failed_over: int = 0
+    stalled: int = 0
+
+
+@dataclasses.dataclass
+class AvailabilityReport:
+    """Aggregate over every ``FailureEvent`` an injector has fired."""
+    downtime: float
+    tasks_failed_over: int
+    tasks_stalled: int
 
 
 class FaultInjector:
+    """Schedules node outages against a :class:`Runtime`'s simulator.
+
+    ``on_down`` / ``on_up`` listeners are called as ``fn(event)`` after the
+    injector has finished its own queue surgery, so listeners observe a
+    consistent node state (``up`` flag set, queues settled).
+    """
+
     def __init__(self, runtime: Runtime):
         self.rt = runtime
         self.events: List[FailureEvent] = []
+        self.on_down: List[Callable[[FailureEvent], None]] = []
+        self.on_up: List[Callable[[FailureEvent], None]] = []
 
-    def fail_node(self, node: str, at: float, duration: float) -> None:
+    def fail_node(self, node: str, at: float, duration: float) -> FailureEvent:
+        if node not in self.rt.nodes:
+            raise KeyError(f"unknown node {node!r}")
         ev = FailureEvent(node=node, t_down=at, t_up=at + duration)
         self.events.append(ev)
-        self.rt.sim.at(at, lambda: self._down(ev))
-        self.rt.sim.at(ev.t_up, lambda: self._up(ev))
+        self.rt.sim.at(at, self._down, ev)
+        self.rt.sim.at(ev.t_up, self._up, ev)
+        return ev
+
+    def report(self) -> AvailabilityReport:
+        return AvailabilityReport(
+            downtime=sum(ev.t_up - ev.t_down for ev in self.events),
+            tasks_failed_over=sum(ev.failed_over for ev in self.events),
+            tasks_stalled=sum(ev.stalled for ev in self.events))
+
+    # -- event bodies -------------------------------------------------------
 
     def _down(self, ev: FailureEvent) -> None:
+        sim = self.rt.sim
         node = self.rt.nodes[ev.node]
         node.up = False
-        # re-dispatch queued work to surviving shard members
+        # Re-dispatch queued compute admissions to a surviving shard
+        # member.  Only _ComputeStart entries move: they carry their op and
+        # re-price at the target (requeue_compute keeps the pending-seconds
+        # signal exact on both nodes).  Anything else queued (hedge lanes,
+        # custom callbacks) stays put — its owner holds a reference and
+        # decides for itself.
         for resource, q in list(node.queues.items()):
             stranded = list(q)
             q.clear()
             for enq, fn in stranded:
-                target = self._failover_target(ev.node)
+                target = None
+                if isinstance(fn, _ComputeStart):
+                    target = self._failover_target(ev.node)
                 if target is None:
-                    # no replica: stall until recovery
-                    node.queues[resource].append((enq, fn))
+                    # no replica (or unmovable entry): stall until recovery
+                    q.append((enq, fn))
+                    ev.stalled += 1
                 else:
-                    self.rt.sim.acquire(self.rt.nodes[target], resource, fn,
+                    ev.failed_over += 1
+                    sim.requeue_compute(fn, self.rt.nodes[target],
                                         enq_time=enq)
+        for fn in self.on_down:
+            fn(ev)
 
     def _up(self, ev: FailureEvent) -> None:
         node = self.rt.nodes[ev.node]
         node.up = True
-        # drain anything that stalled while down
         for resource in list(node.queues):
-            while (node.queues[resource]
-                   and node.in_use[resource] < node.capacity.get(resource, 1)):
-                enq, fn = node.queues[resource].popleft()
-                node.in_use[resource] += 1
-                node.queue_wait += self.rt.sim.now - enq
-                fn()
+            self.rt.sim.kick(node, resource)
+        for fn in self.on_up:
+            fn(ev)
 
     def _failover_target(self, failed: str) -> Optional[str]:
-        # a surviving member of any shard containing the failed node
+        # a surviving up member of any shard containing the failed node
         for pool in self.rt.store.pools.values():
             for shard in pool.shards.values():
                 if failed in shard.nodes:
@@ -77,10 +132,3 @@ class FaultInjector:
 def set_straggler(runtime: Runtime, node: str, speed: float) -> None:
     """speed < 1.0 slows the node's compute (e.g. 0.5 = 2x slower)."""
     runtime.nodes[node].speed = speed
-
-
-@dataclasses.dataclass
-class AvailabilityReport:
-    downtime: float
-    tasks_failed_over: int
-    tasks_stalled: int

@@ -64,6 +64,25 @@ def _least_loaded_on(candidates: Sequence[str], nodes: Dict[str, Node],
     return min(candidates, key=lambda n: node_load(nodes[n], resource))
 
 
+def hedge_candidates(store: CascadeStore, shard: Shard, key: str,
+                     nodes: Dict[str, Node],
+                     exclude: Sequence[str] = ()) -> List[str]:
+    """Up nodes a hedged duplicate of work homed at ``(shard, key)`` may
+    run on: the key's replica shards' members (replication >= 2 is what
+    makes the duplicate's reads local) plus the home shard's own members,
+    minus ``exclude`` (the primary lane's node).  Sorted for determinism;
+    empty means the slot has no live alternative and the caller skips the
+    hedge."""
+    try:
+        homes = store.pool_for(key).replica_homes(key)
+    except KeyError:
+        homes = [shard]
+    cand = {n for h in homes for n in h.nodes}
+    cand.update(shard.nodes)
+    cand.difference_update(exclude)
+    return [n for n in sorted(cand) if nodes[n].up]
+
+
 class ShardLocalScheduler(Scheduler):
     """Affinity mode: run on a member of the key's home shard (paper §4.3).
 

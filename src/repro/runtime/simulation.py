@@ -235,6 +235,31 @@ class Node:
 _NO_ARG = object()          # sentinel: event handler takes no argument
 
 
+class _ComputeStart:
+    """A queued compute admission, as a typed entry instead of a closure.
+
+    While a compute op waits for a lane its queue entry carries (node, op,
+    cont, dur) in inspectable slots, which is what lets failover move the
+    entry to another node with correct accounting (see
+    :meth:`Simulator.requeue_compute`) — a closure would keep the dead
+    node baked into its cell and corrupt in_use/pending on completion.
+    """
+    __slots__ = ("sim", "node", "op", "cont", "dur")
+
+    def __init__(self, sim: "Simulator", node: "Node", op, cont,
+                 dur: float):
+        self.sim = sim
+        self.node = node
+        self.op = op
+        self.cont = cont
+        self.dur = dur
+
+    def __call__(self) -> None:
+        sim = self.sim
+        sim.at(sim.now + self.dur, sim._compute_done,
+               (self.node, self.op, self.cont, self.dur))
+
+
 class Simulator:
     def __init__(self, store: CascadeStore, nodes: Dict[str, Node],
                  net: NetProfile = CLUSTER_NET, seed: int = 0,
@@ -349,6 +374,24 @@ class Simulator:
         if self.on_release is not None and node.up:
             self.on_release(node, resource)
 
+    def kick(self, node: Node, resource: str) -> None:
+        """Start queued work on ``resource`` up to capacity.
+
+        The recovery path: a node coming back up re-admits entries that
+        parked while it was down through the same accounting as
+        ``release`` (in_use, queue_wait, on_release), instead of any
+        caller hand-rolling the drain."""
+        q = node.queues[resource]
+        cap = node.capacity.get(resource, 1)
+        while q and node.up and node.in_use[resource] < cap:
+            enq, fn = q.popleft()
+            node.in_use[resource] += 1
+            node.queue_wait += self.now - enq
+            fn()
+        if self.on_release is not None and node.up and not q and \
+                node.in_use[resource] < cap:
+            self.on_release(node, resource)
+
     # -- task execution ---------------------------------------------------------
 
     def spawn(self, node_name: str, gen: TaskGen, done: Optional[Callable] = None,
@@ -394,11 +437,24 @@ class Simulator:
     def _op_compute(self, node: Node, op, cont) -> None:
         dur = op.seconds / max(node.rate(op.resource), 1e-9)
         node.pending[op.resource] += dur
+        self.acquire(node, op.resource,
+                     _ComputeStart(self, node, op, cont, dur))
 
-        def start():
-            self.at(self.now + dur, self._compute_done,
-                    (node, op, cont, dur))
-        self.acquire(node, op.resource, start)
+    def requeue_compute(self, start: _ComputeStart, dst: Node,
+                        enq_time: Optional[float] = None) -> None:
+        """Move a still-queued compute admission to another node.
+
+        Transfers the pending-seconds load signal and re-prices the op at
+        the destination's rate, so a failed-over op is indistinguishable
+        from one issued to ``dst`` directly.  Only valid for entries that
+        have not started (i.e. popped straight out of a node queue)."""
+        op = start.op
+        start.node.pending[op.resource] -= start.dur
+        dur = op.seconds / max(dst.rate(op.resource), 1e-9)
+        dst.pending[op.resource] += dur
+        start.node = dst
+        start.dur = dur
+        self.acquire(dst, op.resource, start, enq_time=enq_time)
 
     def _compute_done(self, arg) -> None:
         node, op, cont, dur = arg

@@ -38,6 +38,14 @@ enrollment (idle/size/SLO rules) schedules no timer at all, and at most
 ONE pending timer exists per (stage, slot) — when a batch flushes early,
 its timer is left to roll forward to the next open batch on that key
 instead of dying as a dead heap event.
+
+With ``Runtime.hedge_after`` set, a flushed batch that has not completed
+``hedge_after`` seconds later (primary stuck behind a backlog, on a
+straggler, or on a dead node) is duplicated WHOLE to the least-loaded
+live replica/member node; first completion wins, the losing lane's work
+is cancelled and its backlog seconds refunded (:class:`_BatchLane`).
+Only the shared compute op is duplicated, so per-instance accounting is
+identical to an unhedged run whenever no hedge fires.
 """
 from __future__ import annotations
 
@@ -45,6 +53,7 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.runtime.batching import BatchCostModel
+from repro.runtime.scheduler import _least_loaded_on, hedge_candidates
 from repro.runtime.simulation import BatchCompute, SimFuture, WaitFor
 
 
@@ -60,7 +69,8 @@ class BatchPolicy:
 
 class _OpenBatch:
     __slots__ = ("stage", "slot", "resource", "unit_cost", "keys",
-                 "future", "flush_at", "cap", "closed", "deadline_min")
+                 "future", "flush_at", "cap", "closed", "deadline_min",
+                 "lanes")
 
     def __init__(self, stage: str, slot: str, resource: str,
                  unit_cost: float, flush_at: float, cap: int):
@@ -74,6 +84,38 @@ class _OpenBatch:
         self.cap = cap
         self.closed = False
         self.deadline_min: Optional[float] = None   # tightest member deadline
+        self.lanes: Optional[List["_BatchLane"]] = None  # hedged mode only
+
+
+class _BatchLane:
+    """One execution lane of a hedged batch (primary or hedge duplicate).
+
+    Hedging needs what ``Simulator.spawn`` cannot give: the losing lane's
+    work must be cancellable whether it is still queued, or already in
+    service.  So a hedged flush admits the lane itself as the typed queue
+    entry (it is the callable ``acquire`` runs) and the batcher unrolls
+    the compute accounting by hand — pending at issue, busy_time at
+    completion (or partial, at mid-service cancel), release on exit —
+    keeping every counter exactly as the unhedged spawn path would.
+    State machine: queued -> running -> done, with cancelled reachable
+    from queued (entry no-ops when popped, handing its admission slot
+    back) and from running (lane freed now, stale done event ignored).
+    """
+    __slots__ = ("batcher", "batch", "node", "n", "dur", "state",
+                 "t_start")
+
+    def __init__(self, batcher: "StageBatcher", batch: _OpenBatch,
+                 node: str, n: int, dur: float):
+        self.batcher = batcher
+        self.batch = batch
+        self.node = node          # node NAME (lane accounting target)
+        self.n = n
+        self.dur = dur
+        self.state = "queued"
+        self.t_start = 0.0
+
+    def __call__(self) -> None:   # the lane acquired its resource lane
+        self.batcher._lane_start(self)
 
 
 class StageBatcher:
@@ -275,14 +317,23 @@ class StageBatcher:
         node = self.rt.scheduler.pick_batch(
             shard, batch.keys, self.rt.nodes, binding.pool_nodes,
             resource=batch.resource)
-        # price the batch with the EXECUTING backend's amortization curve
-        # (per-tier batching economics); planning used the shared model as
-        # its estimate, execution uses the hardware truth
-        seconds = self._cost_model_for(node).batch_seconds(
-            batch.unit_cost, n)
         self.n_batches += 1
-        self.sim.spawn(node, self._run_batch(batch, seconds, n),
-                       label=f"batch:{batch.stage}")
+        if self.rt.hedge_after is None:
+            # price the batch with the EXECUTING backend's amortization
+            # curve (per-tier batching economics); planning used the
+            # shared model as its estimate, execution uses the hardware
+            # truth
+            seconds = self._cost_model_for(node).batch_seconds(
+                batch.unit_cost, n)
+            self.sim.spawn(node, self._run_batch(batch, seconds, n),
+                           label=f"batch:{batch.stage}")
+            return
+        # hedged mode: issue the primary lane by hand so it stays
+        # cancellable, and arm a one-shot hedge check
+        batch.lanes = []
+        self._issue_lane(batch, node, n)
+        self.sim.at(self.sim.now + self.rt.hedge_after, self._maybe_hedge,
+                    batch)
 
     def _cost_model_for(self, node_name: str) -> BatchCostModel:
         cm = self._node_cm.get(node_name)
@@ -294,6 +345,83 @@ class StageBatcher:
     def _run_batch(self, batch: _OpenBatch, seconds: float, n: int):
         yield BatchCompute(batch.resource, seconds, n)
         self.sim.resolve(batch.future)
+
+    # -- hedged execution (Runtime.hedge_after is set) ----------------------
+
+    def _issue_lane(self, batch: _OpenBatch, node_name: str,
+                    n: int) -> "_BatchLane":
+        """Admit one execution lane of ``batch`` on ``node_name``, with the
+        same accounting a spawned BatchCompute would get at issue time."""
+        node = self.rt.nodes[node_name]
+        seconds = self._cost_model_for(node_name).batch_seconds(
+            batch.unit_cost, n)
+        dur = seconds / max(node.rate(batch.resource), 1e-9)
+        lane = _BatchLane(self, batch, node_name, n, dur)
+        batch.lanes.append(lane)
+        node.n_tasks += 1
+        node.pending[batch.resource] += dur
+        self.sim.acquire(node, batch.resource, lane)
+        return lane
+
+    def _lane_start(self, lane: "_BatchLane") -> None:
+        if lane.state == "cancelled":
+            # cancelled while queued: hand the admission slot straight
+            # back (release re-admits the next queue entry)
+            self.sim.release(self.rt.nodes[lane.node], lane.batch.resource)
+            return
+        lane.state = "running"
+        lane.t_start = self.sim.now
+        self.sim.at(self.sim.now + lane.dur, self._lane_done, lane)
+
+    def _lane_done(self, lane: "_BatchLane") -> None:
+        if lane.state != "running":
+            return                 # cancelled mid-service: stale event
+        lane.state = "done"
+        batch = lane.batch
+        node = self.rt.nodes[lane.node]
+        node.pending[batch.resource] -= lane.dur
+        node.busy_time[batch.resource] += lane.dur
+        # realized batch size lands once, for the WINNING lane only — a
+        # hedged batch must never double-count in coalescing stats
+        self.sim.metrics["batch_sizes"].append(lane.n)
+        self.sim.completed_tasks += 1
+        self.sim.release(node, batch.resource)
+        for other in batch.lanes:
+            if other is not lane:
+                self._cancel_lane(other)
+        self.sim.resolve(batch.future)
+
+    def _cancel_lane(self, lane: "_BatchLane") -> None:
+        if lane.state in ("done", "cancelled"):
+            return
+        batch = lane.batch
+        node = self.rt.nodes[lane.node]
+        node.pending[batch.resource] -= lane.dur   # refund backlog seconds
+        if lane.state == "running":
+            # bill only the service actually rendered, free the lane now
+            node.busy_time[batch.resource] += self.sim.now - lane.t_start
+            lane.state = "cancelled"
+            self.sim.release(node, batch.resource)
+        else:
+            lane.state = "cancelled"   # queued entry no-ops when popped
+
+    def _maybe_hedge(self, batch: _OpenBatch) -> None:
+        """One-shot check ``hedge_after`` seconds after flush: if the
+        batch is still unresolved (primary queued behind a backlog, on a
+        straggler, or on a node that died), duplicate the WHOLE batch to
+        the least-loaded live replica-or-member node.  First lane to
+        finish resolves the shared future and cancels the loser."""
+        if batch.future.done or len(batch.lanes) > 1:
+            return
+        primary = batch.lanes[0]
+        cand = hedge_candidates(
+            self.rt.store, self._shard_for(batch.keys[0], batch.slot),
+            batch.keys[0], self.rt.nodes, exclude=(primary.node,))
+        if not cand:
+            return                 # nowhere to go: not hedgeable
+        node = _least_loaded_on(cand, self.rt.nodes, batch.resource)
+        self.rt.hedges += 1
+        self._issue_lane(batch, node, primary.n)
 
     # -- helpers ------------------------------------------------------------
 
@@ -362,6 +490,8 @@ class StageBatcher:
         if sizes:
             out["mean_batch"] = sum(sizes) / len(sizes)
             out["max_batch"] = max(sizes)
+        if self.rt.hedge_after is not None:
+            out["hedges"] = self.rt.hedges
         if self.planner is not None:
             out.update(self.planner.summary())
         return out

@@ -42,9 +42,10 @@ from repro.core import (CascadeStore, HashPlacement, InstanceAffinity,
                         workflow_key)
 from repro.core.placement import PlacementPolicy
 from repro.runtime import (CLUSTER_NET, AutoScaler, AutoscalePolicy,
-                           Compute, Get, NetProfile, Put, ReplicaScheduler,
-                           Runtime, Scheduler, ShardLocalScheduler,
-                           StageStats)
+                           Compute, FailureEvent, FaultInjector, Get,
+                           NetProfile, Put, ReplicaScheduler, Runtime,
+                           Scheduler, ShardLocalScheduler, StageStats,
+                           replace_gang_pins)
 from repro.runtime.batching import BatchCostModel
 from .batching import BatchPolicy, StageBatcher
 from .graph import INSTANCE, Stage, WorkflowGraph
@@ -234,7 +235,11 @@ class WorkflowRuntime:
     baseline), ``placement`` picks the per-pool policy, ``read_replicas``
     wraps it in ``ReplicatedPlacement``, ``migrate_every`` enables the
     migration driver on pools marked migratable, and ``gang_pin`` turns on
-    workflow-atomic admission.
+    workflow-atomic admission.  ``hedge_after`` arms batch-level hedged
+    execution (see ``repro.workflows.batching``) and
+    :meth:`enable_faults` wires node-death repair — gang re-pinning,
+    stranded-object migration, fault-aware admission — to a
+    :class:`repro.runtime.FaultInjector`.
     """
 
     def __init__(self, graph: WorkflowGraph, *, grouped: bool = True,
@@ -250,6 +255,7 @@ class WorkflowRuntime:
                  cost_model: Optional[BatchCostModel] = None,
                  adaptive_batching: bool = False,
                  adaptive_policy: Optional[AdaptiveBatchPolicy] = None,
+                 hedge_after: Optional[float] = None,
                  evict_completed: bool = False,
                  log_tasks: bool = True,
                  admission: Optional[str] = None,
@@ -266,6 +272,8 @@ class WorkflowRuntime:
         assert admission in (None, "reject", "defer"), admission
         assert not (admission and not graph.instance_tracking), \
             "admission control needs an instance-tracked graph"
+        assert hedge_after is None or batching, \
+            "hedged execution rides the StageBatcher (batching=True)"
         self.graph = graph
         self.grouped = grouped
         self.placement = placement
@@ -338,9 +346,11 @@ class WorkflowRuntime:
             scheduler = (ReplicaScheduler(store) if read_replicas > 1
                          else ShardLocalScheduler())
         self.rt = Runtime(store, resources, net=net, scheduler=scheduler,
-                          seed=seed, log_tasks=log_tasks,
-                          node_profiles=profiles)
+                          seed=seed, hedge_after=hedge_after,
+                          log_tasks=log_tasks, node_profiles=profiles)
         self.store = store
+        self.fault_injector: Optional[FaultInjector] = None
+        self.fault_repins = 0
         self.planner: Optional[BatchPlanner] = None
         self.batcher: Optional[StageBatcher] = None
         if batching:
@@ -619,10 +629,116 @@ class WorkflowRuntime:
         self.autoscaler = scaler
         return scaler.start()
 
+    # -- fault tolerance ----------------------------------------------------
+
+    def enable_faults(self) -> FaultInjector:
+        """Create (once) a :class:`repro.runtime.FaultInjector` against
+        this runtime and wire workflow-atomic repair to it: on a node
+        death that leaves a slot with no live member, every gang pinned
+        there is re-pinned to a surviving slot and its objects follow as
+        charged migrations (:meth:`_on_node_down`), and fresh admissions
+        stop landing on dead slots (:meth:`_admit_pins`).  An attached
+        autoscaler needs no extra wiring — its pressure reads ``Node.up``
+        directly — and hedged batching reacts through the batch future,
+        so the three repair layers compose without ordering constraints.
+        """
+        if self.fault_injector is None:
+            inj = FaultInjector(self.rt)
+            inj.on_down.append(self._on_node_down)
+            self.fault_injector = inj
+        return self.fault_injector
+
+    def _gang_pools(self) -> List[str]:
+        """Instance pools with the anchor first (the order
+        ``replace_gang_pins`` expects: pools[0] places, the rest follow)."""
+        return [self.anchor_pool] + [p for p in self._instance_pools
+                                     if p != self.anchor_pool]
+
+    def _slot_dead(self, pool, sname: str) -> bool:
+        nodes = pool.shards[sname].nodes
+        rt_nodes = self.rt.nodes
+        return bool(nodes) and all(not rt_nodes[n].up for n in nodes)
+
+    def _on_node_down(self, ev: FailureEvent) -> None:
+        """FaultInjector ``on_down`` listener: workflow-atomic gang repair.
+
+        A slot with no live member can serve neither compute nor reads at
+        replication 1, so every gang pinned to such a slot is re-pinned —
+        same surviving slot INDEX in every instance pool, preserving the
+        equal-slot invariant — and the stranded labels' objects move to
+        their new homes as charged migrations (required Gets must keep
+        resolving).  Replicated pools only top up a missing copy at the
+        new primary home and keep the source replicas; a death that
+        leaves the slot with a live member moves nothing (the replica
+        scheduler and nearest-replica reads already route around it).
+        """
+        if not self.gang_pin:
+            return
+        anchor_pool = self.store.pools[self.anchor_pool]
+        anchor = anchor_pool.engine
+        dead = [s for s in anchor.shards
+                if self._slot_dead(anchor_pool, s)]
+        if not dead:
+            return
+        survivors = [s for s in anchor.shards if s not in dead]
+        stranded = anchor.pinned_labels(dead)
+        if not survivors or not stranded:
+            return          # total outage, or nobody pinned there
+        pools = self._gang_pools()
+        replace_gang_pins(self.store, pools, stranded, survivors)
+        self.fault_repins += len(stranded)
+        labels = set(stranded)
+        for prefix in pools:
+            self._migrate_stranded(self.store.pools[prefix], labels)
+
+    def _migrate_stranded(self, pool, labels) -> None:
+        """Make every object of ``labels`` reachable at its (re-pinned)
+        primary home, charging the copy bytes like any migration."""
+        replicated = isinstance(pool.engine.policy, ReplicatedPlacement)
+        moved_groups = set()
+        placed = set()
+        for shard in list(pool.shards.values()):
+            for key, rec in list(shard.objects.items()):
+                if key in placed or rec.affinity not in labels:
+                    continue
+                home = pool.home(key)
+                if home.name == shard.name or key in home.objects:
+                    placed.add(key)
+                    continue
+                placed.add(key)
+                home.objects[key] = rec
+                if not replicated:
+                    # replication 1: a move — the dead copy is the only
+                    # other one and keeping it would resurrect stale data
+                    # at the old home if the label ever hashes back
+                    del shard.objects[key]
+                moved_groups.add(rec.affinity)
+                self.store.stats.bytes_migrated += rec.size
+                if home.nodes:
+                    self.rt.sim._charge_transfer(
+                        self.rt.nodes[home.nodes[0]], rec.size)
+                self.store.invalidate_cached([key])
+        self.store.stats.migrations += len(moved_groups)
+
+    # -- gang placement -----------------------------------------------------
+
     def _admit_pins(self, instance: str) -> None:
         label = instance_label(instance)
-        anchor = self.store.pools[self.anchor_pool].engine
-        slot = anchor.shards.index(anchor.home_of(label))
+        anchor_pool = self.store.pools[self.anchor_pool]
+        anchor = anchor_pool.engine
+        home = anchor.home_of(label)
+        if self.fault_injector is not None and \
+                self._slot_dead(anchor_pool, home):
+            # fault-aware admission: policy placement is blind to Node.up,
+            # so re-place over live slots (same mechanism as gang repair)
+            # instead of pinning a fresh gang to a slot that cannot serve
+            survivors = [s for s in anchor.shards
+                         if not self._slot_dead(anchor_pool, s)]
+            if survivors:
+                replace_gang_pins(self.store, self._gang_pools(),
+                                  [label], survivors)
+                return
+        slot = anchor.shards.index(home)
         for prefix in self._instance_pools:
             eng = self.store.pools[prefix].engine
             eng.pin(label, eng.shards[slot])
@@ -649,6 +765,14 @@ class WorkflowRuntime:
         )
         if self.batcher is not None:
             out.update(self.batcher.summary())
+        if self.rt.hedge_after is not None:
+            out.setdefault("hedges", self.rt.hedges)
+        if self.fault_injector is not None:
+            rep = self.fault_injector.report()
+            out["fault_downtime_s"] = round(rep.downtime, 4)
+            out["fault_failovers"] = rep.tasks_failed_over
+            out["fault_stalled"] = rep.tasks_stalled
+            out["fault_repins"] = self.fault_repins
         if self.admission is not None:
             out["admission_rejects"] = self.admission_rejects
             out["admission_deferrals"] = self.admission_deferrals

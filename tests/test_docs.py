@@ -16,6 +16,7 @@ ARCH_DOC = DOCS / "architecture.md"
 WORKFLOWS_DOC = DOCS / "workflows.md"
 BATCHING_DOC = DOCS / "batching.md"
 ELASTICITY_DOC = DOCS / "elasticity.md"
+FAULTS_DOC = DOCS / "faults.md"
 
 
 def fenced_python_blocks(text: str):
@@ -51,10 +52,12 @@ def test_docs_exist():
     assert WORKFLOWS_DOC.exists()
     assert BATCHING_DOC.exists()
     assert ELASTICITY_DOC.exists()
+    assert FAULTS_DOC.exists()
 
 
 @pytest.mark.parametrize("doc", [API_DOC, ARCH_DOC, WORKFLOWS_DOC,
-                                 BATCHING_DOC, ELASTICITY_DOC])
+                                 BATCHING_DOC, ELASTICITY_DOC,
+                                 FAULTS_DOC])
 def test_all_qualified_names_resolve(doc):
     names = qualified_names(doc.read_text())
     assert names, f"{doc.name} should document qualified repro.* symbols"
@@ -70,7 +73,7 @@ def test_all_qualified_names_resolve(doc):
 @pytest.mark.parametrize(
     "doc_idx_snippet",
     [(doc, i, snip) for doc in (API_DOC, WORKFLOWS_DOC, BATCHING_DOC,
-                                ELASTICITY_DOC)
+                                ELASTICITY_DOC, FAULTS_DOC)
      for i, snip in enumerate(fenced_python_blocks(doc.read_text()))],
     ids=lambda p: f"{p[0].stem}-snippet{p[1]}")
 def test_doc_snippets_run(doc_idx_snippet):

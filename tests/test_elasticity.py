@@ -204,6 +204,44 @@ def test_workflow_autoscale_end_to_end_slo_pressure():
     assert wrt.summary()["n"] == 500               # nothing lost
 
 
+def test_down_member_saturates_pressure():
+    """A dead node in the active set is SLO pressure in itself — the
+    controller must not wait for the latency echo."""
+    rt, _ = _scaled_runtime()
+    sc = AutoScaler(rt, ["/x"], spare_nodes=["sp0"], slo=0.1)
+    assert sc.pressure()[0] == 0.0
+    rt.nodes["n0"].up = False
+    p, signal = sc.pressure()
+    assert p >= sc.policy.high_pressure and signal == "down"
+    rt.nodes["n0"].up = True
+    assert sc.pressure()[0] == 0.0
+
+
+def test_node_outage_provokes_scale_out_and_recovery():
+    """Failure-induced pressure reaches the controller: a sustained
+    outage at valley load (no latency signal yet) provokes a scale-out
+    within one evaluation period of the death, and after recovery the
+    fleet settles back with no capacity leak."""
+    wrt = WorkflowRuntime(_graph(fast=2, spares=2, cost=0.01),
+                          **mode_kwargs("atomic+abatch"))
+    sc = wrt.enable_autoscale(
+        slo=0.1, policy=AutoscalePolicy(interval=0.02, min_samples=4,
+                                        min_shards=2))
+    inj = wrt.enable_faults()
+    inj.fail_node("fast0", at=0.2, duration=0.4)
+    for i in range(120):
+        wrt.submit(f"i{i}", at=0.01 + i / 100.0)      # valley load
+    for i in range(60):                               # post-recovery tail
+        wrt.submit(f"t{i}", at=1.3 + i / 50.0)
+    wrt.run()
+    outs = [d for d in sc.decisions if d.new_shards > d.old_shards]
+    assert outs and outs[0].t <= 0.2 + 2 * 0.02 + 1e-9
+    assert "down" in outs[0].reason
+    assert any(d.new_shards < d.old_shards for d in sc.decisions)
+    assert sc._n_active() + len(sc.spare) == 4        # no capacity leak
+    assert wrt.summary()["n"] == 180                  # nothing lost
+
+
 # -- admission control --------------------------------------------------------
 
 def test_admission_rejects_infeasible_deadline():
