@@ -93,12 +93,53 @@ def load_bench_json(suite: str):
 DELTA_METRICS = {"p50_ms": 0.05, "p99_ms": 0.05, "slo_miss": 0.0,
                  "wall_s": 0.5}
 
+# host-measured metrics: advisory even under --strict (they time the CI
+# runner, not the code — a noisy neighbor must not fail the build)
+WALL_METRICS = {"wall_s", "sim_wall_s"}
+
 # suite-specific thresholds layered on the defaults: fig11's chaos
 # counters are hard floors — a single lost instance, or late completions
 # creeping past 10%, is a fault-tolerance regression worth a warn line
 SUITE_DELTA_METRICS = {
     "fig11": {**DELTA_METRICS, "lost": 0.0, "late_completions": 0.10},
 }
+
+
+def bench_regressions(suite: str, prior, rows, metrics=None):
+    """Structured regression records of a fresh run vs the prior record.
+
+    Returns ``(regressions, compared)`` where each regression is a dict
+    with the suite/row/metric, old and new values, the relative change,
+    and ``wall`` (True for host-clock metrics, which stay advisory even
+    under ``--strict``).  Every metric in the suite's threshold table is
+    lower-is-better.
+    """
+    if not prior:
+        return [], 0
+    thresholds = metrics or SUITE_DELTA_METRICS.get(suite, DELTA_METRICS)
+    old = {r["name"]: r for r in prior.get("rows", ())}
+    regs = []
+    compared = 0
+    for name, _, derived in rows:
+        ref = old.get(name)
+        if ref is None:
+            continue
+        for metric, rel in thresholds.items():
+            a, b = ref.get(metric), derived.get(metric)
+            if not (isinstance(a, (int, float)) and
+                    isinstance(b, (int, float))) or \
+                    isinstance(a, bool) or isinstance(b, bool):
+                continue
+            compared += 1
+            floor = abs(a) * rel + 1e-9
+            if b > a + floor:
+                regs.append({
+                    "suite": suite, "name": name, "metric": metric,
+                    "old": a, "new": b,
+                    "pct": (b - a) / a * 100 if a else float("inf"),
+                    "wall": metric in WALL_METRICS,
+                })
+    return regs, compared
 
 
 def bench_deltas(suite: str, prior, rows, metrics=None):
@@ -109,30 +150,20 @@ def bench_deltas(suite: str, prior, rows, metrics=None):
     threshold, plus a one-line summary.  Purely advisory: the caller
     prints them (warn-only in CI) so the committed BENCH files become an
     actual perf trajectory instead of a write-only artifact.
+    ``run.py --strict`` escalates the non-wall ones to failures.
     """
-    if not prior:
-        return []
-    thresholds = metrics or SUITE_DELTA_METRICS.get(suite, DELTA_METRICS)
-    old = {r["name"]: r for r in prior.get("rows", ())}
-    out = []
-    compared = 0
-    for name, _, derived in rows:
-        ref = old.get(name)
-        if ref is None:
-            continue
-        for metric, rel in thresholds.items():
-            a, b = ref.get(metric), derived.get(metric)
-            if not (isinstance(a, (int, float)) and
-                    isinstance(b, (int, float)))or \
-                    isinstance(a, bool) or isinstance(b, bool):
-                continue
-            compared += 1
-            floor = abs(a) * rel + 1e-9
-            if b > a + floor:
-                pct = (b - a) / a * 100 if a else float("inf")
-                out.append(f"{suite} {name} {metric} {a} -> {b} "
-                           f"(+{pct:.1f}%)")
+    regs, compared = bench_regressions(suite, prior, rows, metrics)
+    out = [f"{r['suite']} {r['name']} {r['metric']} {r['old']} -> "
+           f"{r['new']} (+{r['pct']:.1f}%)" for r in regs]
     if compared:
         out.append(f"{suite}: {compared} metric(s) compared vs prior "
                    f"record, {len(out)} regressed")
     return out
+
+
+def write_chrome_trace(tracer, name: str):
+    """Export a recorder's retained traces as ``trace_<name>.json`` in
+    the artifacts dir (Perfetto-loadable; CI uploads these)."""
+    path = ARTIFACTS / f"trace_{name}.json"
+    payload = tracer.export_chrome_trace(path=str(path))
+    return path, payload

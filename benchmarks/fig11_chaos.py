@@ -80,7 +80,7 @@ def submit_stream(wrt):
 
 
 def run_chaos(intensity, wired, read_replicas=1, hedge=None,
-              autoscale=False, straggler=True, seed=0):
+              autoscale=False, straggler=True, seed=0, tracing=False):
     """One configuration over the shared schedule + chaos at ``intensity``.
 
     ``wired=False`` leaves the injector raw — failures flip nodes but the
@@ -90,6 +90,7 @@ def run_chaos(intensity, wired, read_replicas=1, hedge=None,
     from repro.workflows import WorkflowRuntime, mode_kwargs
     wrt = WorkflowRuntime(build_graph(), seed=seed,
                           read_replicas=read_replicas, hedge_after=hedge,
+                          tracing=tracing,
                           **mode_kwargs("atomic+abatch"))
     if autoscale:
         wrt.enable_autoscale(slo=SLO)
@@ -167,6 +168,29 @@ def run(quick=True):
                          for d in sc.decisions)
     conserved = sc._n_active() + len(sc.spare) == BASE_SLOTS + SPARE_SLOTS
 
+    # one traced chaos run (max intensity, full repair stack): the blame
+    # table shows where the outage's latency went (fault_stall /
+    # migration / queueing), and the exported chrome trace is the CI
+    # artifact.  Tracing reproduces latencies byte-for-byte (tested).
+    from .common import write_chrome_trace
+    t0 = time.perf_counter()
+    wrt, inj, n = run_chaos(max(CHAOS), wired=True, read_replicas=2,
+                            hedge=HEDGE_AFTER, tracing=True)
+    s = wrt.summary()
+    path, payload = write_chrome_trace(wrt.tracer, "fig11")
+    rows.append((f"fig11/trace/repl+hedge{max(CHAOS)}",
+                 s["median"] * 1e6,
+                 {"p99_ms": round(s["p99"] * 1e3, 2),
+                  "spans": s["spans"],
+                  "trace_events": len(payload["traceEvents"]),
+                  "blame_top": s["blame_top"],
+                  "blame_fault_stall_ms": s["blame_fault_stall_ms"],
+                  "blame_queueing_ms": s["blame_queueing_ms"],
+                  "artifact": path.name,
+                  "wall_s": round(time.perf_counter() - t0, 3)}))
+    traced_matches = abs(s["p99"] - p99[f"repl+hedge{max(CHAOS)}"]) \
+        < 1e-12
+
     # -- acceptance ---------------------------------------------------------
     zero_lost = all(v == 0 for v in lost.values())
     hedging_beats_stall = all(p99[f"repl+hedge{k}"] < p99[f"none{k}"]
@@ -185,10 +209,12 @@ def run(quick=True):
         "hedges_engaged": hedges_engaged,
         "auto_scaled_on_down_signal": scaled_on_down,
         "capacity_conserved": conserved,
+        "traced_run_latency_identical": traced_matches,
     }))
     assert zero_lost and hedging_beats_stall \
         and hedging_beats_repair_alone and repair_engaged \
-        and hedges_engaged and scaled_on_down and conserved, rows[-1][2]
+        and hedges_engaged and scaled_on_down and conserved \
+        and traced_matches, rows[-1][2]
     return rows
 
 

@@ -35,11 +35,12 @@ PER_SHARD_RATE = 12.0          # instances/s per shard (below saturation)
 
 
 def run_workflow(shape: str, mode: str, shards: int, n_instances: int,
-                 seed: int = 0):
+                 seed: int = 0, tracing=False):
     from repro.workflows import (WORKFLOW_SHAPES, WorkflowRuntime,
                                  mode_kwargs, preload_index)
     graph = WORKFLOW_SHAPES[shape](shards=shards)
-    wrt = WorkflowRuntime(graph, seed=seed, **mode_kwargs(mode))
+    wrt = WorkflowRuntime(graph, seed=seed, tracing=tracing,
+                          **mode_kwargs(mode))
     if shape == "rag":
         preload_index(wrt)
     rate = PER_SHARD_RATE * shards
@@ -47,7 +48,27 @@ def run_workflow(shape: str, mode: str, shards: int, n_instances: int,
         wrt.submit(f"req{i}", at=0.05 + i / rate,
                    deadline=DEADLINES[shape])
     wrt.run()
-    return wrt.summary()
+    return wrt
+
+
+def trace_row(per_shard: int):
+    """One traced exemplar (rag/4sh/atomic+mig) exporting the Perfetto
+    artifact CI uploads.  Tracing reproduces every latency byte-for-byte
+    (tested), so this is the same run as the sweep's, plus spans."""
+    from .common import write_chrome_trace
+    wrt = run_workflow("rag", "atomic+mig", 4, n_instances=per_shard * 4,
+                       tracing=True)
+    s = wrt.summary()
+    path, payload = write_chrome_trace(wrt.tracer, "fig7")
+    return ("fig7/trace/rag/4sh/atomic+mig", s["median"] * 1e6,
+            {"p50_ms": round(s["median"] * 1e3, 2),
+             "p99_ms": round(s["p99"] * 1e3, 2),
+             "spans": s["spans"],
+             "traces_completed": s["traces_completed"],
+             "trace_events": len(payload["traceEvents"]),
+             "blame_top": s["blame_top"],
+             "blame_compute_ms": s["blame_compute_ms"],
+             "artifact": path.name})
 
 
 def run(quick=True):
@@ -60,7 +81,7 @@ def run(quick=True):
             for mode in MODES:
                 t0 = time.perf_counter()
                 s = run_workflow(shape, mode, shards,
-                                 n_instances=per_shard * shards)
+                                 n_instances=per_shard * shards).summary()
                 name = f"fig7/{shape}/{shards}sh/{mode}"
                 rows.append((name, s["median"] * 1e6,
                              {"p50_ms": round(s["median"] * 1e3, 2),
@@ -71,6 +92,7 @@ def run(quick=True):
                               "migrations": s["migrations"],
                               "wall_s": round(time.perf_counter() - t0, 3),
                               "n": s["n"]}))
+    rows.append(trace_row(per_shard))
     return rows
 
 

@@ -46,7 +46,8 @@ PREPR_FIG7_32SLOT_WALL_S = 4.70
 
 
 def run_config(shape: str, mode: str, rate_x: int, window_ms: float = 0.0,
-               slots: int = SLOTS, n_instances: int = None, seed: int = 0):
+               slots: int = SLOTS, n_instances: int = None, seed: int = 0,
+               tracing=False):
     from repro.workflows import (WORKFLOW_SHAPES, BatchPolicy,
                                  WorkflowRuntime, mode_kwargs,
                                  preload_index)
@@ -54,7 +55,7 @@ def run_config(shape: str, mode: str, rate_x: int, window_ms: float = 0.0,
     kw = mode_kwargs(mode)
     if kw.get("batching"):
         kw["batch_policy"] = BatchPolicy(window=window_ms * 1e-3)
-    wrt = WorkflowRuntime(graph, seed=seed, **kw)
+    wrt = WorkflowRuntime(graph, seed=seed, tracing=tracing, **kw)
     if shape == "rag":
         preload_index(wrt)
     rate = PER_SLOT_RATE * rate_x * slots

@@ -45,12 +45,13 @@ FULLSCALE_SHAPE, FULLSCALE_RATE = "rag", 8
 
 
 def run_adaptive(shape: str, rate_x: int, slots: int = SLOTS,
-                 n_instances: int = None, seed: int = 0):
+                 n_instances: int = None, seed: int = 0, tracing=False):
     """One ``atomic+abatch`` run — same stream as ``fig8.run_config``."""
     from repro.workflows import (WORKFLOW_SHAPES, WorkflowRuntime,
                                  mode_kwargs, preload_index)
     graph = WORKFLOW_SHAPES[shape](shards=slots)
-    wrt = WorkflowRuntime(graph, seed=seed, **mode_kwargs("atomic+abatch"))
+    wrt = WorkflowRuntime(graph, seed=seed, tracing=tracing,
+                          **mode_kwargs("atomic+abatch"))
     if shape == "rag":
         preload_index(wrt)
     rate = PER_SLOT_RATE * rate_x * slots
@@ -154,6 +155,11 @@ def long_horizon_row(n_instances: int):
     return (f"fig9/long_horizon/{n_instances}", s["p99"] * 1e6, row)
 
 
+def _blame_keys(s):
+    """The flattened blame table a traced summary carries."""
+    return {k: v for k, v in s.items() if k.startswith("blame_")}
+
+
 def fullscale_rows():
     """The sustained-overload plateau: full-scale rag at 8x.
 
@@ -161,20 +167,28 @@ def fullscale_rows():
     ``FULLSCALE_PER_SLOT`` instances/slot and asserts adaptive p99 <=
     the best static — the regression gate for the queue-drain /
     economic-hold terms (the pre-term planner lost this point by ~13%).
+
+    These runs are TRACED (tracing reproduces every latency
+    byte-for-byte, so the committed p99 numbers are unaffected): each
+    row carries its blame decomposition, and
+    ``scripts/bench_explain.py`` diffs the adaptive row against the best
+    static one to name the category behind the residual — the committed
+    ``BLAME_fig9_rag8x.md`` table.
     """
     n = FULLSCALE_PER_SLOT * SLOTS
     rows = []
     static_p99 = {}
     for w in WINDOWS_MS[FULLSCALE_SHAPE]:
         s = run_config(FULLSCALE_SHAPE, "atomic+batch", FULLSCALE_RATE,
-                       float(w), n_instances=n)
+                       float(w), n_instances=n, tracing=True)
         static_p99[w] = s["p99"]
         rows.append((f"fig9/fullscale/{FULLSCALE_SHAPE}/"
                      f"{FULLSCALE_RATE}x/static{w}ms",
                      s["median"] * 1e6,
                      {"p99_ms": round(s["p99"] * 1e3, 2),
-                      "n": s["n"]}))
-    sa = run_adaptive(FULLSCALE_SHAPE, FULLSCALE_RATE, n_instances=n)
+                      "n": s["n"], **_blame_keys(s)}))
+    sa = run_adaptive(FULLSCALE_SHAPE, FULLSCALE_RATE, n_instances=n,
+                      tracing=True)
     best = min(static_p99.values())
     le_best = sa["p99"] <= best + 1e-12
     rows.append((f"fig9/fullscale/{FULLSCALE_SHAPE}/"
@@ -185,7 +199,7 @@ def fullscale_rows():
                   "le_best_static": le_best,
                   "mean_batch": round(sa.get("mean_batch", 1.0), 2),
                   "saturated_plans": sa.get("saturated_plans", 0),
-                  "n": sa["n"]}))
+                  "n": sa["n"], **_blame_keys(sa)}))
     assert le_best, (sa["p99"], static_p99)
     return rows
 

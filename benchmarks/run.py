@@ -15,7 +15,8 @@ from . import (azure_mode, fig3_single_client, fig4_three_clients,
                fig5_no_caching, fig6_replication, fig7_workflows,
                fig8_batching, fig9_adaptive, fig10_elastic, fig11_chaos,
                micro_affinity, roofline, serving_affinity)
-from .common import bench_deltas, emit, load_bench_json, write_bench_json
+from .common import (bench_regressions, emit, load_bench_json,
+                     write_bench_json)
 
 SUITES = {
     "fig3": fig3_single_client,
@@ -40,9 +41,14 @@ def main() -> None:
                     help="paper-scale workloads (700 frames etc.)")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail (exit 1) on perf regressions vs the "
+                         "committed BENCH records, beyond each metric's "
+                         "tolerance; host wall clocks stay advisory")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(SUITES))
     failures = []
+    strict_regs = []
     print("name,us_per_call,derived")
     for name in names:
         mod = SUITES[name]
@@ -59,10 +65,23 @@ def main() -> None:
         path = write_bench_json(name, rows, wall)
         print(f"# {name}: {wall:.1f}s -> {path.name}", file=sys.stderr)
         # perf trajectory: per-metric deltas vs the prior record.
-        # Warn-only — regressions print but never fail the run; the
+        # Warn-only by default; --strict (CI on the committed suites)
+        # escalates non-wall regressions to a failing exit.  The
         # committed BENCH files + these lines ARE the cross-PR record.
-        for line in bench_deltas(name, prior, rows):
-            print(f"# PERF {line}", file=sys.stderr)
+        regs, compared = bench_regressions(name, prior, rows)
+        for r in regs:
+            tag = "PERF(wall)" if r["wall"] else "PERF"
+            print(f"# {tag} {r['suite']} {r['name']} {r['metric']} "
+                  f"{r['old']} -> {r['new']} (+{r['pct']:.1f}%)",
+                  file=sys.stderr)
+        if compared:
+            print(f"# {name}: {compared} metric(s) compared vs prior "
+                  f"record, {len(regs)} regressed", file=sys.stderr)
+        strict_regs.extend(r for r in regs if not r["wall"])
+    if args.strict and strict_regs:
+        print(f"# STRICT: {len(strict_regs)} non-wall regression(s) vs "
+              f"committed records", file=sys.stderr)
+        sys.exit(1)
     if failures:
         print(f"# FAILED suites: {','.join(failures)}", file=sys.stderr)
         sys.exit(1)

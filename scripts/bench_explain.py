@@ -1,0 +1,135 @@
+"""Explain a benchmark delta: which blame category moved the latency.
+
+Diffs two BENCH rows that carry blame decompositions (the ``blame_*_ms``
+keys traced benchmark runs embed — per-instance mean milliseconds per
+exclusive category, see ``repro.workflows.blame``) and names the
+category that moved.  Two modes:
+
+  * two record files — every row name present in both is diffed
+    (``python scripts/bench_explain.py old/BENCH_fig9.json \
+    benchmarks/artifacts/BENCH_fig9.json``): the cross-PR question
+    "my p99 regressed; what kind of time did it gain?";
+  * one record file and two row names (``--row A --row2 B``): the
+    within-run question "config B beats config A; where does the
+    residual live?" — e.g. the committed fig9 full-scale rag-8x
+    adaptive-vs-static table (``BLAME_fig9_rag8x.md``):
+
+      python scripts/bench_explain.py \
+          benchmarks/artifacts/BENCH_fig9.json \
+          --row  fig9/fullscale/rag/8x/static16ms \
+          --row2 fig9/fullscale/rag/8x/adaptive \
+          -o benchmarks/artifacts/BLAME_fig9_rag8x.md
+
+Output is a markdown blame table (stdout, and ``-o`` to write a file):
+one line per category with both sides' per-instance milliseconds and the
+delta, the dominant mover called out, and the e2e/p99 movement it
+explains.  Exits non-zero if neither side carries blame keys — an
+untraced record cannot be explained, only re-measured.
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.runtime.tracing import CATEGORIES  # noqa: E402
+
+
+def load_rows(path: str):
+    payload = json.loads(Path(path).read_text())
+    return {r["name"]: r for r in payload.get("rows", ())}
+
+
+def blame_of(row):
+    out = {}
+    for cat in CATEGORIES:
+        v = row.get(f"blame_{cat}_ms")
+        if isinstance(v, (int, float)):
+            out[cat] = float(v)
+    return out
+
+
+def explain(row_a, row_b, label_a, label_b):
+    """Markdown lines diffing ``row_b`` against ``row_a``."""
+    ba, bb = blame_of(row_a), blame_of(row_b)
+    if not ba or not bb:
+        missing = label_a if not ba else label_b
+        raise SystemExit(f"no blame_*_ms keys in {missing!r} — "
+                         f"re-run the suite with tracing enabled")
+    lines = [f"### {label_b} vs {label_a}", ""]
+    p99a, p99b = row_a.get("p99_ms"), row_b.get("p99_ms")
+    if isinstance(p99a, (int, float)) and isinstance(p99b, (int, float)):
+        lines.append(f"p99: {p99a} ms -> {p99b} ms "
+                     f"({p99b - p99a:+.2f} ms)")
+        lines.append("")
+    lines.append(f"| category | {label_a} (ms/inst) | "
+                 f"{label_b} (ms/inst) | delta (ms) |")
+    lines.append("|---|---|---|---|")
+    deltas = {}
+    for cat in CATEGORIES:
+        a, b = ba.get(cat, 0.0), bb.get(cat, 0.0)
+        deltas[cat] = b - a
+        lines.append(f"| {cat} | {a:.3f} | {b:.3f} | {b - a:+.3f} |")
+    tot_a, tot_b = sum(ba.values()), sum(bb.values())
+    lines.append(f"| **total (= mean e2e)** | {tot_a:.3f} | {tot_b:.3f} "
+                 f"| {tot_b - tot_a:+.3f} |")
+    mover = max(deltas, key=lambda c: abs(deltas[c]))
+    lines.append("")
+    lines.append(f"**Dominant mover: `{mover}` "
+                 f"({deltas[mover]:+.3f} ms/instance)** — "
+                 f"{abs(deltas[mover]) / max(abs(tot_b - tot_a), 1e-12):.0%}"
+                 f" of the {tot_b - tot_a:+.3f} ms mean-latency move.")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="name the blame category behind a benchmark delta")
+    ap.add_argument("record_a", help="BENCH_*.json (baseline)")
+    ap.add_argument("record_b", nargs="?", default=None,
+                    help="second BENCH_*.json; omit to compare two rows "
+                         "of record_a (--row/--row2)")
+    ap.add_argument("--row", default=None,
+                    help="row name on the baseline side")
+    ap.add_argument("--row2", default=None,
+                    help="row name on the comparison side")
+    ap.add_argument("-o", "--out", default=None,
+                    help="also write the markdown to this path")
+    args = ap.parse_args()
+
+    rows_a = load_rows(args.record_a)
+    lines = []
+    if args.record_b is not None:
+        rows_b = load_rows(args.record_b)
+        names = [n for n in rows_b if n in rows_a]
+        if args.row:
+            names = [n for n in names if n == args.row]
+        explained = 0
+        for n in names:
+            if not (blame_of(rows_a[n]) and blame_of(rows_b[n])):
+                continue
+            lines.extend(explain(rows_a[n], rows_b[n],
+                                 f"{n} (old)", f"{n} (new)"))
+            lines.append("")
+            explained += 1
+        if not explained:
+            raise SystemExit("no shared rows carry blame_*_ms keys")
+    else:
+        if not (args.row and args.row2):
+            ap.error("single-record mode needs --row and --row2")
+        for r in (args.row, args.row2):
+            if r not in rows_a:
+                raise SystemExit(f"row {r!r} not in {args.record_a}; "
+                                 f"rows: {sorted(rows_a)[:8]}...")
+        lines.extend(explain(rows_a[args.row], rows_a[args.row2],
+                             args.row, args.row2))
+    text = "\n".join(lines) + "\n"
+    print(text, end="")
+    if args.out:
+        Path(args.out).write_text(text)
+        print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,8 @@ from .faults import (AvailabilityReport, FailureEvent, FaultInjector,
                      set_straggler)
 from .autoscale import (AutoScaler, AutoscalePolicy, ScaleDecision,
                         replace_gang_pins)
+from .tracing import (CATEGORIES, InstanceTrace, Span, TraceConfig,
+                      TraceRecorder)
 
 __all__ = [
     "AZURE_NET", "CLUSTER_NET", "BatchCompute", "Compute", "Get",
@@ -25,4 +27,5 @@ __all__ = [
     "Runtime", "TaskContext",
     "AvailabilityReport", "FailureEvent", "FaultInjector", "set_straggler",
     "AutoScaler", "AutoscalePolicy", "ScaleDecision", "replace_gang_pins",
+    "CATEGORIES", "InstanceTrace", "Span", "TraceConfig", "TraceRecorder",
 ]

@@ -413,6 +413,12 @@ class AutoScaler:
         decision.bytes_moved = total_bytes
         decision.groups_moved = total_groups
         self.decisions.append(decision)
+        if self.rt.sim.tracer is not None:
+            self.rt.sim.tracer.instant(
+                None, "scale", self.rt.sim.now,
+                {"old": decision.old_shards, "new": decision.new_shards,
+                 "pressure": round(decision.pressure, 3),
+                 "reason": decision.reason, "bytes": total_bytes})
         self._cooldown = (self.policy.cooldown_out if grow
                           else self.policy.cooldown_in)
         self._active_log.append((self.rt.sim.now, self._n_active()))

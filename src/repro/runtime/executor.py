@@ -75,6 +75,9 @@ class Runtime:
         # tasks dispatched to a shard and not yet completed — includes work
         # parked in the per-group sequencer, which node queues never see
         self.shard_outstanding: Dict[str, int] = defaultdict(int)
+        # key -> live InstanceTrace resolver (set by the workflow layer
+        # when tracing is enabled); None keeps _launch at one check
+        self.trace_of: Optional[Callable[[str], Any]] = None
 
     # -- registration ----------------------------------------------------------
 
@@ -112,6 +115,7 @@ class Runtime:
         ctx = TaskContext(runtime=self, node=node, key=key, shard=shard.name)
         gen = binding.make_task(ctx, key, value)
         t0 = self.sim.now
+        trace = self.trace_of(key) if self.trace_of is not None else None
 
         def done():
             self.shard_outstanding[shard.name] -= 1
@@ -126,7 +130,7 @@ class Runtime:
                 if nxt is not None:
                     self._launch(label, *nxt)
 
-        self.sim.spawn(node, gen, done=done)
+        self.sim.spawn(node, gen, done=done, trace=trace)
 
     # -- load-aware group migration ----------------------------------------------
 

@@ -86,6 +86,10 @@ class FaultInjector:
         sim = self.rt.sim
         node = self.rt.nodes[ev.node]
         node.up = False
+        if sim.tracer is not None:
+            # the recorder keeps per-node down intervals so lane waits
+            # overlapping an outage are blamed fault_stall, not queueing
+            sim.tracer.note_down(ev.node, sim.now)
         # Re-dispatch queued compute admissions to a surviving shard
         # member.  Only _ComputeStart entries move: they carry their op and
         # re-price at the target (requeue_compute keeps the pending-seconds
@@ -113,6 +117,8 @@ class FaultInjector:
     def _up(self, ev: FailureEvent) -> None:
         node = self.rt.nodes[ev.node]
         node.up = True
+        if self.rt.sim.tracer is not None:
+            self.rt.sim.tracer.note_up(ev.node, self.rt.sim.now)
         for resource in list(node.queues):
             self.rt.sim.kick(node, resource)
         for fn in self.on_up:

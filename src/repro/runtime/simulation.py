@@ -180,12 +180,16 @@ class SimFuture:
     primitive cross-task barriers (e.g. batched stage execution) build on
     without round-tripping through the object store.
     """
-    __slots__ = ("done", "value", "_waiting")
+    __slots__ = ("done", "value", "_waiting", "blame")
 
     def __init__(self):
         self.done = False
         self.value: Any = None
         self._waiting: List[Callable[[Any], None]] = []
+        # True when the future's owner (e.g. the StageBatcher) records
+        # its own exact blame spans for waiters — the tracer then skips
+        # the generic WaitFor barrier span to avoid double coverage
+        self.blame = False
 
 
 @dataclasses.dataclass
@@ -277,6 +281,10 @@ class Simulator:
         self.events_fired = 0
         self.metrics: Dict[str, Any] = defaultdict(list)
         self.udl_dispatch: Optional[Callable] = None  # set by Runtime
+        # optional span sink (repro.runtime.tracing.TraceRecorder),
+        # attached externally; None keeps every traced path to a single
+        # predicate check
+        self.tracer: Optional[Any] = None
         # called as on_release(node, resource) when a lane frees with an
         # empty queue (the work-conserving flush hook the adaptive
         # batcher uses); None costs one branch on the release hot path
@@ -395,20 +403,70 @@ class Simulator:
     # -- task execution ---------------------------------------------------------
 
     def spawn(self, node_name: str, gen: TaskGen, done: Optional[Callable] = None,
-              label: str = "") -> None:
-        """Run a generator task on a node, advancing sim time per op."""
+              label: str = "", trace: Any = None) -> None:
+        """Run a generator task on a node, advancing sim time per op.
+
+        With ``trace`` (an ``InstanceTrace``) and a tracer attached, the
+        step loop records every op's elapsed interval the moment the
+        generator resumes (``TraceRecorder.record_op`` appends one
+        primitive tuple; categorization into spans is deferred to trace
+        completion) — the untraced loop below stays byte-identical when
+        either is absent.
+        """
         node = self.nodes[node_name]
         node.n_tasks += 1
         send = gen.send
         handlers = self._handlers
 
+        if trace is not None and self.tracer is not None:
+            cut = self.tracer.local_cut
+            record = self.tracer.record_op
+            pending_op: Any = None
+            pending_t = 0.0
+
+            def step(send_value=None):
+                nonlocal pending_op, pending_t, step
+                now = self.now
+                if pending_op is not None:
+                    # one compare + one flat-record append per op is
+                    # the whole hot-path cost: categorization is
+                    # deferred to trace materialization.  Sub-cut ops
+                    # (local puts/gets, instantly-satisfied waits) are
+                    # noise the blame sweep charges to "other" as
+                    # uncovered time anyway
+                    if now - pending_t > cut:
+                        record(trace, pending_op, pending_t, now, node)
+                    pending_op = None
+                try:
+                    op = send(send_value)
+                except StopIteration:
+                    self.completed_tasks += 1
+                    if done is not None:
+                        done()
+                    # step references itself (it hands itself to the op
+                    # handler as the continuation), so the closure is a
+                    # reference cycle refcounting can never free; clear
+                    # the cell and the whole task's closure graph dies
+                    # here instead of piling up for the collector
+                    step = None
+                    return
+                pending_op = op
+                pending_t = now
+                handler = handlers.get(type(op)) or self._handler_for(op)
+                handler(node, op, step)
+
+            step(None)
+            return
+
         def step(send_value=None):
+            nonlocal step
             try:
                 op = send(send_value)
             except StopIteration:
                 self.completed_tasks += 1
                 if done is not None:
                     done()
+                step = None     # break the step->closure->step cycle
                 return
             handler = handlers.get(type(op)) or self._handler_for(op)
             handler(node, op, step)

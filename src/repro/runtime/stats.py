@@ -206,6 +206,76 @@ class StageStats:
         """True while quantiles are exact (stream within the buffer)."""
         return self._buf is not None
 
+    # -- combination / serialization ---------------------------------------
+
+    def merge(self, other: "StageStats") -> "StageStats":
+        """Fold ``other``'s stream into this sketch (e.g. per-slot stats
+        combined into a cluster-wide one).  Requires identical binning
+        parameters — merging histograms with different geometry would
+        silently corrupt quantiles.  The merged sketch stays exact only
+        while the combined stream still fits the warm-up buffer;
+        otherwise it graduates to sketch-only, like a long stream would.
+        """
+        assert (self._lo, self._ratio, self._nbins) == \
+            (other._lo, other._ratio, other._nbins), \
+            "merge() needs identical binning parameters"
+        if other.count == 0:
+            return self
+        total = self.count + other.count
+        self.mean += (other.mean - self.mean) * other.count / total
+        self.count = total
+        if other.min < self.min:
+            self.min = other.min
+        if other.max > self.max:
+            self.max = other.max
+        self._zeros += other._zeros
+        counts = self._counts
+        for i, c in enumerate(other._counts):
+            if c:
+                counts[i] += c
+        if self._buf is not None and other._buf is not None and \
+                total <= self.exact_cap:
+            for x in other._buf:
+                bisect.insort(self._buf, x)
+        else:
+            self._buf = None
+        return self
+
+    def to_dict(self) -> Dict[str, object]:
+        """JSON-serializable state (sparse histogram), round-tripped by
+        :meth:`from_dict` — the shape BENCH records embed sketches as."""
+        out: Dict[str, object] = {
+            "count": self.count, "mean": self.mean,
+            "exact_cap": self.exact_cap, "lo": self._lo,
+            "ratio": self._ratio, "nbins": self._nbins,
+            "zeros": self._zeros,
+            "bins": {str(i): c for i, c in enumerate(self._counts) if c},
+        }
+        if self.count:
+            out["min"] = self.min
+            out["max"] = self.max
+        if self._buf is not None:
+            out["buf"] = list(self._buf)
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "StageStats":
+        st = cls(exact_cap=int(d["exact_cap"]), lo=float(d["lo"]),
+                 ratio=float(d["ratio"]))
+        assert st._nbins == int(d["nbins"]), \
+            (st._nbins, d["nbins"], "binning drifted across versions")
+        st.count = int(d["count"])
+        st.mean = float(d["mean"])
+        st.min = float(d.get("min", float("inf")))
+        st.max = float(d.get("max", float("-inf")))
+        st._zeros = int(d["zeros"])
+        for i, c in d["bins"].items():
+            st._counts[int(i)] = int(c)
+        buf = d.get("buf")
+        st._buf = sorted(float(x) for x in buf) if buf is not None \
+            else None
+        return st
+
     def footprint(self) -> Tuple[int, int]:
         """(buffered samples, histogram bins) — both bounded by design."""
         n_buf = len(self._buf) if self._buf is not None else 0

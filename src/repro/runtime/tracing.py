@@ -1,0 +1,510 @@
+"""Causal per-instance tracing: span records for every layer of the stack.
+
+``TraceRecorder`` is the mechanism half of the observability layer (the
+policy half — blame decomposition and critical-path extraction — lives in
+``repro.workflows.blame``).  A recorder is attached to a simulator from
+the *outside* (``sim.tracer = recorder``); the simulator never imports
+this module and, with no recorder attached, pays exactly one attribute
+check on the paths that could emit — tracing off is the byte-identical
+hot path every benchmark already measures.
+
+Design constraints, in order:
+
+  * **The DES result must not change.**  Tracing only observes: sampling
+    is a deterministic hash of the instance id (never ``sim.rng`` — a
+    random draw would perturb every downstream seed), and no recorder
+    call schedules events or touches node state.  Enabling tracing on a
+    run reproduces every latency byte-for-byte.
+  * **O(1) per event, bounded memory.**  A span append is a list append
+    on a sampled instance's trace; unsampled instances cost one dict
+    miss.  Completed traces are retained in a fixed-size reservoir plus
+    a tail-biased top-K-by-latency heap (the p99 cohort is exactly what
+    blame queries want), so memory is bounded by ``TraceConfig`` knobs,
+    not horizon.
+  * **Category spans, not log lines.**  Every span carries one of
+    :data:`CATEGORIES` so the blame sweep can decompose an instance's
+    end-to-end latency into exclusive buckets.  For raw simulator ops
+    the work is split across the instance lifecycle: the step loop
+    appends flat records of atomic values (``record_op`` — invisible to
+    the GC), and ``materialize`` categorizes them (compute service vs
+    lane wait vs down-node stall, local vs remote data ops, barrier
+    waits) lazily — at completion when completion hooks consume spans,
+    else when a retained trace is first read; traces that retention
+    evicts unread are never categorized at all.
+
+``export_chrome_trace`` emits Chrome trace-event JSON (``ph``/``ts``/
+``dur``/``pid``/``tid``) loadable in Perfetto / ``chrome://tracing``:
+one process per node, one thread per instance, global instants (node
+death, scale decisions) on a synthetic cluster track.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import json
+import random
+import zlib
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Tuple)
+
+from .simulation import (BatchCompute, Compute, Get, Put, Sleep, Trigger,
+                         WaitFor)
+
+#: Exclusive blame categories, highest attribution priority first: time
+#: where real service happens (compute/network/migration) outranks time
+#: explained by a stall, which outranks the passive waits.  The blame
+#: sweep (``repro.workflows.blame``) charges every instant of an
+#: instance's e2e window to exactly one of these.
+CATEGORIES = ("compute", "network", "migration", "fault_stall",
+              "queueing", "batch_wait", "barrier", "admission_defer",
+              "other")
+
+_PRIORITY = {c: i for i, c in enumerate(CATEGORIES)}
+
+# record_op's exact-type dispatch table (isinstance only on a miss)
+_COMPUTE, _GET, _PUT, _WAIT, _OTHER = range(5)
+_OP_KIND = {Compute: _COMPUTE, BatchCompute: _COMPUTE, Get: _GET,
+            Put: _PUT, Trigger: _PUT, WaitFor: _WAIT, Sleep: _OTHER}
+#: slots per raw op record in ``InstanceTrace.raw``
+_RAW_W = 7
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    """Sampling / retention knobs.
+
+    ``sample_rate`` selects instances by a deterministic hash of their id
+    (same instances traced on every run — reproducible cohorts, zero RNG
+    perturbation).  ``max_traces`` bounds the uniform reservoir of
+    completed traces; ``top_k`` bounds the tail-biased retention (the
+    slowest completed instances, kept regardless of the reservoir —
+    blame queries about p99 cohorts read these).
+    """
+    sample_rate: float = 1.0
+    max_traces: int = 512
+    top_k: int = 64
+
+
+class Span:
+    """One closed interval of an instance's timeline."""
+    __slots__ = ("name", "cat", "t0", "t1", "node", "args")
+
+    def __init__(self, name: str, cat: str, t0: float, t1: float,
+                 node: str = "", args: Optional[Dict[str, Any]] = None):
+        self.name = name
+        self.cat = cat
+        self.t0 = t0
+        self.t1 = t1
+        self.node = node
+        self.args = args
+
+    def __repr__(self):
+        return (f"Span({self.cat}:{self.name} "
+                f"[{self.t0:.6f},{self.t1:.6f}] @{self.node})")
+
+
+class InstanceTrace:
+    """The causal record of one workflow instance (or serving turn)."""
+    __slots__ = ("instance", "t_submit", "t_complete", "spans", "events",
+                 "marks", "raw")
+
+    def __init__(self, instance: str, t_submit: float):
+        self.instance = instance
+        self.t_submit = t_submit
+        self.t_complete: Optional[float] = None
+        self.spans: List[Span] = []
+        self.events: List[Tuple[str, float, Optional[Dict]]] = []
+        # scratch timestamps the instrumentation layers stitch spans
+        # from (ingress put time, first join arrival, ...)
+        self.marks: Dict[Any, float] = {}
+        # deferred op records from the DES step loop: a FLAT list of
+        # atomic values, _RAW_W slots per record (kind, t0, t1,
+        # node_name, a, b, c), appended on the hot path and categorized
+        # into spans once, at completion (see ``TraceRecorder.record_op``
+        # / ``complete``).  Flat atoms instead of per-record tuples so
+        # tracing retains zero GC-tracked objects per op — the traced
+        # run's generational-collection workload stays that of the
+        # untraced run.
+        self.raw: List[Any] = []
+
+    @property
+    def e2e(self) -> Optional[float]:
+        if self.t_complete is None:
+            return None
+        return self.t_complete - self.t_submit
+
+
+class TraceRecorder:
+    """Span sink shared by the simulator, workflow, and serving layers.
+
+    Attach with ``sim.tracer = recorder`` (the workflow runtime's
+    ``tracing=`` knob does this); layers emit through the methods below
+    and gate every call site on ``sim.tracer is not None`` so the
+    disabled path stays free.
+    """
+
+    def __init__(self, config: Optional[TraceConfig] = None):
+        self.config = config or TraceConfig()
+        self._threshold = int(min(max(self.config.sample_rate, 0.0), 1.0)
+                              * 2.0 ** 32)
+        self.live: Dict[str, InstanceTrace] = {}
+        self.reservoir: List[InstanceTrace] = []
+        self._top: List[Tuple[float, int, InstanceTrace]] = []  # min-heap
+        self._seq = 0
+        self.global_events: List[Tuple[str, float, Optional[Dict]]] = []
+        self.n_begun = 0
+        self.n_completed = 0
+        self.n_spans = 0
+        # own deterministic stream for reservoir replacement — NEVER the
+        # simulator's rng (tracing must not perturb the DES)
+        self._rng = random.Random(0xC0FFEE)
+        # node -> down intervals [(t_down, t_up|inf)] fed by the fault
+        # injector; op_span splits lane waits against these
+        self._downs: Dict[str, List[List[float]]] = {}
+        self.on_complete: List[Callable[[InstanceTrace], None]] = []
+        # elapsed-time threshold separating local store ops from remote
+        # transfers: local ops cost ``Simulator.local_get_cost`` (2 µs
+        # default) while the cheapest remote hop pays at least the RTT
+        # (10 µs cluster, ms cloud), so 4x the local cost separates the
+        # two.  ``attach`` re-derives it from the simulator's setting.
+        self.local_cut = 8.2e-6
+        # resource -> span-name caches (hot-path f-string avoidance)
+        self._cnames: Dict[str, str] = {}
+        self._lnames: Dict[str, str] = {}
+        # the attached simulator's node table — raw op records carry
+        # node *names*, so materialization looks rates up here
+        self._nodes: Optional[Dict[str, Any]] = None
+
+    def attach(self, sim) -> "TraceRecorder":
+        """Install this recorder on a simulator (``sim.tracer = self``)
+        and calibrate the local/remote op threshold to its settings."""
+        sim.tracer = self
+        self.local_cut = sim.local_get_cost * 4 + 2e-7
+        self._nodes = sim.nodes
+        return self
+
+    # -- sampling / lifecycle ----------------------------------------------
+
+    def sampled(self, instance: str) -> bool:
+        """Deterministic per-instance coin: hash, not RNG."""
+        return (zlib.crc32(instance.encode()) & 0xFFFFFFFF) \
+            < self._threshold
+
+    def begin(self, instance: str, t_submit: float
+              ) -> Optional[InstanceTrace]:
+        if not self.sampled(instance):
+            return None
+        tr = InstanceTrace(instance, t_submit)
+        self.live[instance] = tr
+        self.n_begun += 1
+        return tr
+
+    def drop(self, instance: str) -> None:
+        """Forget a live trace (rejected admission, abandoned turn)."""
+        self.live.pop(instance, None)
+
+    def complete(self, trace: InstanceTrace, t: float) -> None:
+        """Finalize a trace (idempotent) and move it into retention.
+
+        The step loop only appends raw records via ``record_op`` (one
+        flat-list extend per op — the event-loop overhead budget), and
+        retention needs nothing but the latency, so the categorization
+        work (service/wait split, local/remote cut, span objects) runs
+        lazily: here only when completion hooks need spans, otherwise
+        when a retained trace is first read (``traces`` / ``tail`` /
+        ``export_chrome_trace``).  A trace that retention evicts unread
+        is dropped without ever being categorized."""
+        if trace.t_complete is not None:
+            return
+        trace.t_complete = t
+        self.live.pop(trace.instance, None)
+        self.n_completed += 1
+        if self.on_complete:
+            self.materialize(trace)
+            for fn in self.on_complete:
+                fn(trace)
+        self._retain(trace)
+
+    def materialize(self, trace: InstanceTrace) -> None:
+        """Categorize a trace's deferred raw op records into spans
+        (idempotent — the raw buffer is consumed)."""
+        raw = trace.raw
+        if raw:
+            emit = self._emit
+            for i in range(0, len(raw), _RAW_W):
+                emit(trace, raw, i)
+            del raw[:]
+
+    def _retain(self, trace: InstanceTrace) -> None:
+        cfg = self.config
+        self._seq += 1
+        lat = trace.e2e or 0.0
+        if len(self._top) < cfg.top_k:
+            heapq.heappush(self._top, (lat, self._seq, trace))
+        elif self._top and lat > self._top[0][0]:
+            heapq.heapreplace(self._top, (lat, self._seq, trace))
+        if len(self.reservoir) < cfg.max_traces:
+            self.reservoir.append(trace)
+        else:
+            j = self._rng.randrange(self.n_completed)
+            if j < cfg.max_traces:
+                self.reservoir[j] = trace
+
+    def traces(self) -> List[InstanceTrace]:
+        """Every retained completed trace (reservoir ∪ tail cohort)."""
+        seen = set()
+        out = []
+        for tr in self.reservoir:
+            if id(tr) not in seen:
+                seen.add(id(tr))
+                out.append(tr)
+        for _, _, tr in sorted(self._top):
+            if id(tr) not in seen:
+                seen.add(id(tr))
+                out.append(tr)
+        for tr in out:
+            self.materialize(tr)
+        return out
+
+    def tail(self, k: Optional[int] = None) -> List[InstanceTrace]:
+        """The slowest retained traces, slowest first."""
+        out = [tr for _, _, tr in sorted(self._top, reverse=True)]
+        out = out if k is None else out[:k]
+        for tr in out:
+            self.materialize(tr)
+        return out
+
+    # -- span emission ------------------------------------------------------
+
+    def span(self, trace: InstanceTrace, cat: str, name: str, t0: float,
+             t1: float, node: str = "",
+             args: Optional[Dict[str, Any]] = None) -> None:
+        if t1 <= t0:
+            return
+        trace.spans.append(Span(name, cat, t0, t1, node, args))
+        self.n_spans += 1
+
+    def instant(self, trace: Optional[InstanceTrace], name: str, t: float,
+                args: Optional[Dict[str, Any]] = None) -> None:
+        """A zero-duration marker: per-instance, or global (trace=None)."""
+        if trace is None:
+            self.global_events.append((name, t, args))
+        else:
+            trace.events.append((name, t, args))
+
+    def wait_span(self, trace: InstanceTrace, node: str, t0: float,
+                  t1: float, name: str) -> None:
+        """Record a lane/queue wait, splitting out any overlap with the
+        node's recorded down intervals as ``fault_stall``."""
+        if t1 <= t0:
+            return
+        downs = self._downs.get(node)
+        if downs:
+            cur = t0
+            for d0, d1 in downs:
+                a, b = max(cur, d0), min(t1, d1)
+                if b > a:
+                    if a > cur:
+                        self.span(trace, "queueing", name, cur, a, node)
+                    self.span(trace, "fault_stall", name, a, b, node)
+                    cur = b
+                if cur >= t1:
+                    break
+            if cur < t1:
+                self.span(trace, "queueing", name, cur, t1, node)
+        else:
+            self.span(trace, "queueing", name, t0, t1, node)
+
+    def record_op(self, trace: InstanceTrace, op: Any, t0: float,
+                  t1: float, node: Any) -> None:
+        """Append one raw op record to ``trace.raw`` — the traced DES
+        step loop's whole per-op cost.
+
+        A record is ``_RAW_W`` flat slots of atomic values (kind tag,
+        timestamps, names, the op's cost parameters) extended onto one
+        list — never the op or node objects, and no per-record
+        container — so tracing retains zero GC-tracked objects per op
+        and extends no object lifetimes.  The categorization into spans
+        happens once, in ``complete``.
+        """
+        tp = type(op)
+        # exact-type dispatch first (op types are never subclassed in
+        # practice), isinstance chain only as fallback
+        kind = _OP_KIND.get(tp)
+        if kind is None:
+            kind = (_COMPUTE if isinstance(op, (Compute, BatchCompute))
+                    else _GET if isinstance(op, Get)
+                    else _PUT if isinstance(op, (Put, Trigger))
+                    else _WAIT if isinstance(op, WaitFor) else _OTHER)
+        if kind == _COMPUTE:
+            trace.raw.extend((_COMPUTE, t0, t1, node.name, op.resource,
+                              op.seconds,
+                              op.n if tp is BatchCompute else 0))
+        elif kind == _WAIT:
+            if not getattr(op.future, "blame", False):
+                trace.raw.extend((_WAIT, t0, t1, node.name, "wait",
+                                  0.0, 0))
+            # else: batch future — the batcher decomposes it itself
+        elif kind == _OTHER:            # Sleep and anything exotic
+            trace.raw.extend((_OTHER, t0, t1, node.name,
+                              tp.__name__.lower(), 0.0, 0))
+        elif kind == _GET and op.wait:  # blocking get = a barrier
+            trace.raw.extend((_WAIT, t0, t1, node.name,
+                              f"get_wait:{op.key}", 0.0, 0))
+        else:                           # plain data op: Get/Put/Trigger
+            trace.raw.extend((kind, t0, t1, node.name, op.key, 0.0, 0))
+
+    def _emit(self, trace: InstanceTrace, raw: List[Any], i: int) -> None:
+        """Categorize the raw op record at ``raw[i:i+_RAW_W]`` into
+        spans (completion time; indexed reads — no record slicing).
+
+        ``[t0, t1]`` is everything the op cost the instance.  Compute
+        ops are split into service (re-derived from the op's cost and
+        the node's rate — completion-time rates, identical unless a
+        straggler dial moved mid-instance, and the clamp keeps every
+        span inside ``[t0, t1]`` so the exactness invariant never
+        depends on it) vs lane wait (queueing / fault_stall); remote
+        data ops are ``network`` while sub-cut local ones record
+        nothing (the blame sweep charges uncovered time to ``other``,
+        so skipping the micro-span changes no decomposition); barrier
+        waits (``Get(wait=True)``, bare ``WaitFor``) are ``barrier``.
+        """
+        kind, t0, t1, nn = raw[i], raw[i + 1], raw[i + 2], raw[i + 3]
+        if t1 <= t0:
+            return
+        if kind == _COMPUTE:
+            res = raw[i + 4]
+            nodes = self._nodes
+            node = nodes.get(nn) if nodes is not None else None
+            rate = node.rate(res) if node is not None else 1.0
+            dur = raw[i + 5] / max(rate, 1e-9)
+            start = max(t0, t1 - dur)       # failover may re-price; clamp
+            if start > t0:
+                names = self._lnames
+                lname = names.get(res) or \
+                    names.setdefault(res, f"lane:{res}")
+                if self._downs.get(nn):
+                    self.wait_span(trace, nn, t0, start, lname)
+                else:               # common case: plain queueing
+                    trace.spans.append(Span(lname, "queueing", t0,
+                                            start, nn))
+                    self.n_spans += 1
+            if start >= t1:                 # zero-cost op: nothing to show
+                return
+            names = self._cnames
+            name = names.get(res) or \
+                names.setdefault(res, f"compute:{res}")
+            bn = raw[i + 6]
+            trace.spans.append(Span(name, "compute", start, t1, nn,
+                                    {"n": bn} if bn else None))
+        elif kind == _WAIT:
+            trace.spans.append(Span(raw[i + 4], "barrier", t0, t1, nn))
+        elif kind == _GET:
+            if t1 - t0 <= self.local_cut:
+                return      # local op: the sweep charges it to "other"
+            trace.spans.append(Span("get", "network", t0, t1, nn,
+                                    {"key": raw[i + 4]}))
+        elif kind == _PUT:
+            if t1 - t0 <= self.local_cut:
+                return      # local op: the sweep charges it to "other"
+            trace.spans.append(Span("put", "network", t0, t1, nn,
+                                    {"key": raw[i + 4]}))
+        else:
+            trace.spans.append(Span(raw[i + 4], "other", t0, t1, nn))
+        self.n_spans += 1
+
+    def op_span(self, trace: InstanceTrace, op: Any, t0: float, t1: float,
+                node: Any) -> None:
+        """Categorize one simulator op's elapsed interval immediately —
+        the single-op equivalent of ``record_op`` + ``complete``'s
+        deferred materialization, for callers outside the step loop."""
+        if t1 <= t0:
+            return
+        raw = trace.raw
+        mark = len(raw)
+        self.record_op(trace, op, t0, t1, node)
+        if len(raw) > mark:
+            self._emit(trace, raw, mark)
+            del raw[mark:]
+
+    # -- fault bookkeeping --------------------------------------------------
+
+    def note_down(self, node: str, t: float) -> None:
+        self._downs.setdefault(node, []).append([t, float("inf")])
+        self.instant(None, "node_down", t, {"node": node})
+
+    def note_up(self, node: str, t: float) -> None:
+        downs = self._downs.get(node)
+        if downs and downs[-1][1] == float("inf"):
+            downs[-1][1] = t
+        self.instant(None, "node_up", t, {"node": node})
+
+    # -- export -------------------------------------------------------------
+
+    def export_chrome_trace(self, path: Optional[str] = None,
+                            traces: Optional[Iterable[InstanceTrace]]
+                            = None) -> Dict[str, Any]:
+        """Chrome trace-event JSON (Perfetto / chrome://tracing loadable).
+
+        One *process* per node (named via ``M`` metadata), one *thread*
+        per instance; spans are ``ph="X"`` complete events with
+        microsecond ``ts``/``dur``; per-instance and global instants are
+        ``ph="i"`` events (scope thread / global).  Returns the payload;
+        writes it to ``path`` when given.
+        """
+        pids: Dict[str, int] = {}
+        tids: Dict[str, int] = {}
+        events: List[Dict[str, Any]] = []
+
+        def pid_of(node: str) -> int:
+            pid = pids.get(node)
+            if pid is None:
+                pid = pids[node] = len(pids) + 1
+                events.append({"ph": "M", "name": "process_name",
+                               "pid": pid, "tid": 0,
+                               "args": {"name": node or "cluster"}})
+            return pid
+
+        def tid_of(instance: str) -> int:
+            tid = tids.get(instance)
+            if tid is None:
+                tid = tids[instance] = len(tids) + 1
+            return tid
+
+        cluster = pid_of("cluster")
+        for tr in (self.traces() if traces is None else traces):
+            self.materialize(tr)        # no-op unless deferred raw remains
+            tid = tid_of(tr.instance)
+            for sp in tr.spans:
+                ev = {"name": sp.name, "cat": sp.cat, "ph": "X",
+                      "ts": sp.t0 * 1e6,
+                      "dur": (sp.t1 - sp.t0) * 1e6,
+                      "pid": pid_of(sp.node or "cluster"), "tid": tid,
+                      "args": {"instance": tr.instance,
+                               **(sp.args or {})}}
+                events.append(ev)
+            for name, t, args in tr.events:
+                events.append({"name": name, "cat": "event", "ph": "i",
+                               "ts": t * 1e6, "s": "t",
+                               "pid": pid_of("cluster"), "tid": tid,
+                               "args": args or {}})
+        for name, t, args in self.global_events:
+            events.append({"name": name, "cat": "cluster", "ph": "i",
+                           "ts": t * 1e6, "s": "g", "pid": cluster,
+                           "tid": 0, "args": args or {}})
+        payload = {"traceEvents": events, "displayTimeUnit": "ms"}
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(payload, f)
+        return payload
+
+    def summary(self) -> Dict[str, Any]:
+        return {"traces_begun": self.n_begun,
+                "traces_completed": self.n_completed,
+                "spans": self.n_spans,
+                "retained": len(self.traces()),
+                "live": len(self.live)}
+
+
+def priority(cat: str) -> int:
+    """Attribution priority of a category (lower wins the blame sweep)."""
+    return _PRIORITY[cat]

@@ -88,8 +88,13 @@ class ServingEngine:
                  policy: str = "affinity",
                  net: NetProfile = CLUSTER_NET, seed: int = 0,
                  cost_model: Optional[BatchCostModel] = None,
-                 row_profiles: Optional[Sequence[HardwareProfile]] = None):
+                 row_profiles: Optional[Sequence[HardwareProfile]] = None,
+                 tracer: Optional[Any] = None):
         self.model = model
+        # optional repro.runtime.tracing.TraceRecorder: every turn becomes
+        # one completed trace (queueing/migration/prefill/decode spans
+        # telescoping exactly over the turn's virtual window)
+        self.tracer = tracer
         profs = list(row_profiles or [])
         profs += [UNIFORM] * (n_rows - len(profs))
         self.rows = [Row(model, params, max_slots, max_seq,
@@ -154,6 +159,7 @@ class ServingEngine:
         row = self.rows[row_idx]
 
         t = max(now, row.busy_until)
+        t_q = t                     # queue wait ends here
         mig_bytes = 0
         migrated = False
         # adapter residency (baselines fetch per row; affinity pins)
@@ -220,6 +226,21 @@ class ServingEngine:
                         migration_bytes=mig_bytes, ttft=ttft,
                         decode_time=t_dec, tokens=len(out))
         self.metrics.append(m)
+        if self.tracer is not None:
+            tr = self.tracer.begin(req_id, now)
+            if tr is not None:
+                rname = f"row{row_idx}"
+                tracer = self.tracer
+                tracer.span(tr, "queueing", "row_queue", now, t_q,
+                            node=rname)
+                tracer.span(tr, "migration", "session_migrate", t_q, t,
+                            node=rname, args={"bytes": mig_bytes})
+                tracer.span(tr, "compute", "prefill", t, t + t_prefill,
+                            node=rname)
+                tracer.span(tr, "compute", "decode", t + t_prefill,
+                            row.busy_until, node=rname,
+                            args={"tokens": len(out), "slots": row.load()})
+                tracer.complete(tr, row.busy_until)
         return out, m
 
     # -- internals ---------------------------------------------------------------

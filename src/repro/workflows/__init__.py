@@ -1,5 +1,6 @@
 """Event-triggered workflow graphs over affinity groups (paper §2, §4.5)."""
 from .batching import BatchPolicy, StageBatcher
+from .blame import BlameTable, critical_path, decompose, timeline
 from .graph import (INSTANCE, Emit, Pool, Read, Stage, Tier, WorkflowGraph,
                     WorkflowGraphError)
 from .planner import AdaptiveBatchPolicy, BatchPlanner
@@ -9,6 +10,7 @@ from .library import (WORKFLOW_SHAPES, index_keys, mode_kwargs,
 
 __all__ = [
     "BatchPolicy", "StageBatcher",
+    "BlameTable", "critical_path", "decompose", "timeline",
     "AdaptiveBatchPolicy", "BatchPlanner",
     "INSTANCE", "Emit", "Pool", "Read", "Stage", "Tier", "WorkflowGraph",
     "WorkflowGraphError",

@@ -52,6 +52,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from repro.core import instance_of
 from repro.runtime.batching import BatchCostModel
 from repro.runtime.scheduler import _least_loaded_on, hedge_candidates
 from repro.runtime.simulation import BatchCompute, SimFuture, WaitFor
@@ -70,7 +71,7 @@ class BatchPolicy:
 class _OpenBatch:
     __slots__ = ("stage", "slot", "resource", "unit_cost", "keys",
                  "future", "flush_at", "cap", "closed", "deadline_min",
-                 "lanes")
+                 "lanes", "traced", "flush_t", "plan", "id")
 
     def __init__(self, stage: str, slot: str, resource: str,
                  unit_cost: float, flush_at: float, cap: int):
@@ -80,11 +81,19 @@ class _OpenBatch:
         self.unit_cost = unit_cost
         self.keys: List[str] = []
         self.future = SimFuture()
+        # the batcher records exact batch_wait/queueing/compute spans for
+        # traced members, so the tracer must skip the generic WaitFor
+        self.future.blame = True
         self.flush_at = flush_at
         self.cap = cap
         self.closed = False
         self.deadline_min: Optional[float] = None   # tightest member deadline
         self.lanes: Optional[List["_BatchLane"]] = None  # hedged mode only
+        # tracing (populated only when a tracer is attached)
+        self.traced: Optional[List] = None     # [(InstanceTrace, enroll_t)]
+        self.flush_t = 0.0
+        self.plan: Optional[Tuple[float, int]] = None  # planner (window, cap)
+        self.id = -1
 
 
 class _BatchLane:
@@ -193,6 +202,8 @@ class StageBatcher:
                 window, cap = self.policy.window, self.policy.max_batch
             batch = _OpenBatch(stage.name, ctx.shard, stage.resource,
                                stage.cost, now + window, cap)
+            if planner is not None and self.sim.tracer is not None:
+                batch.plan = (window, cap)     # the planner's decision
             self._open[bkey] = batch
             if planner is not None:
                 for n in self._shard_for(ctx.key, ctx.shard).nodes:
@@ -200,6 +211,12 @@ class StageBatcher:
                         (n, stage.resource), {})[bkey] = None
         batch.keys.append(ctx.key)
         self.enrolled += 1
+        if self.sim.tracer is not None:
+            tr = self.sim.tracer.live.get(instance_of(ctx.key))
+            if tr is not None:
+                if batch.traced is None:
+                    batch.traced = []
+                batch.traced.append((tr, now))
         if deadline is not None and deadline >= now + \
                 self.cost_model.batch_seconds(batch.unit_cost, 1) + \
                 self.policy.slo_margin:
@@ -318,6 +335,9 @@ class StageBatcher:
             shard, batch.keys, self.rt.nodes, binding.pool_nodes,
             resource=batch.resource)
         self.n_batches += 1
+        if batch.traced is not None:
+            batch.flush_t = self.sim.now
+            batch.id = self.n_batches
         if self.rt.hedge_after is None:
             # price the batch with the EXECUTING backend's amortization
             # curve (per-tier batching economics); planning used the
@@ -325,7 +345,7 @@ class StageBatcher:
             # truth
             seconds = self._cost_model_for(node).batch_seconds(
                 batch.unit_cost, n)
-            self.sim.spawn(node, self._run_batch(batch, seconds, n),
+            self.sim.spawn(node, self._run_batch(batch, seconds, n, node),
                            label=f"batch:{batch.stage}")
             return
         # hedged mode: issue the primary lane by hand so it stays
@@ -342,9 +362,40 @@ class StageBatcher:
             cm = self._node_cm[node_name] = profile_cm or self.cost_model
         return cm
 
-    def _run_batch(self, batch: _OpenBatch, seconds: float, n: int):
+    def _run_batch(self, batch: _OpenBatch, seconds: float, n: int,
+                   node_name: str):
         yield BatchCompute(batch.resource, seconds, n)
+        if batch.traced is not None:
+            # resolve-time arithmetic: the op just completed at now, and
+            # its service time is seconds re-priced at the executing node
+            node = self.rt.nodes[node_name]
+            dur = seconds / max(node.rate(batch.resource), 1e-9)
+            self._record_batch(batch, node_name,
+                               max(batch.flush_t, self.sim.now - dur),
+                               self.sim.now)
         self.sim.resolve(batch.future)
+
+    def _record_batch(self, batch: _OpenBatch, node_name: str,
+                      t_start: float, t_end: float) -> None:
+        """Exact per-member blame spans for a completed batch: formation
+        wait (enroll -> flush), slot queueing (flush -> service start,
+        split against node down intervals), shared compute (start -> end).
+        Together they tile each member's entire blocked interval, which is
+        what lets blame sums stay exact under batching."""
+        tracer = self.sim.tracer
+        if tracer is None:
+            return
+        args = {"batch": batch.id, "n": len(batch.keys)}
+        if batch.plan is not None:
+            args["window_ms"] = round(batch.plan[0] * 1e3, 4)
+            args["cap"] = batch.plan[1]
+        for tr, enroll in batch.traced:
+            tracer.span(tr, "batch_wait", f"batchform:{batch.stage}",
+                        enroll, batch.flush_t, node=batch.slot)
+            tracer.wait_span(tr, node_name, batch.flush_t, t_start,
+                             name=f"batchq:{batch.stage}")
+            tracer.span(tr, "compute", f"batch:{batch.stage}", t_start,
+                        t_end, node=node_name, args=args)
 
     # -- hedged execution (Runtime.hedge_after is set) ----------------------
 
@@ -389,6 +440,10 @@ class StageBatcher:
         for other in batch.lanes:
             if other is not lane:
                 self._cancel_lane(other)
+        if batch.traced is not None:
+            # blame the WINNING lane only: its queueing/compute interval
+            # is what the members actually waited out
+            self._record_batch(batch, lane.node, lane.t_start, self.sim.now)
         self.sim.resolve(batch.future)
 
     def _cancel_lane(self, lane: "_BatchLane") -> None:
@@ -421,6 +476,12 @@ class StageBatcher:
             return                 # nowhere to go: not hedgeable
         node = _least_loaded_on(cand, self.rt.nodes, batch.resource)
         self.rt.hedges += 1
+        if batch.traced is not None:
+            tracer = self.sim.tracer
+            for tr, _ in batch.traced:
+                tracer.instant(tr, f"hedge:{batch.stage}", self.sim.now,
+                               {"primary": primary.node, "hedge": node,
+                                "batch": batch.id})
         self._issue_lane(batch, node, primary.n)
 
     # -- helpers ------------------------------------------------------------

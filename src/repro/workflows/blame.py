@@ -1,0 +1,178 @@
+"""Latency blame attribution over :mod:`repro.runtime.tracing` spans.
+
+``decompose`` turns one completed :class:`~repro.runtime.tracing.
+InstanceTrace` into an **exclusive** split of its end-to-end latency
+across :data:`~repro.runtime.tracing.CATEGORIES`.  The algorithm is an
+interval sweep, not per-span summing: all spans are clipped to the
+instance's ``[t_submit, t_complete]`` window, the window is cut at every
+span boundary, and each elementary interval is charged to the highest-
+priority category active over it (compute beats network beats stalls
+beats passive waits); intervals covered by nothing are charged to
+``other``.  Because the elementary intervals partition the window
+exactly, the per-category durations sum to the e2e latency **by
+construction** — concurrency (fan-out stages running in parallel),
+overlap (a hedge racing a stall) and double-recording cannot break the
+invariant, only shift time between categories.
+
+``critical_path`` returns that winning-segment timeline itself: the
+contiguous chain of (category, span-name, t0, t1) segments from submit
+to completion — "what was this instance waiting on at every instant",
+which is the causal path a per-stage profile (InferLine) or an
+interference diagnosis (ODIN) starts from.
+
+``BlameTable`` aggregates decompositions across instances: exact float
+totals per category (for shares) plus bounded
+:class:`repro.runtime.StageStats` sketches per category (for tails),
+serializable into BENCH records via ``StageStats.to_dict``.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, Dict, List, Tuple
+
+from repro.runtime.stats import StageStats
+from repro.runtime.tracing import CATEGORIES, InstanceTrace, priority
+
+Segment = Tuple[str, str, float, float]     # (category, name, t0, t1)
+
+
+def timeline(trace: InstanceTrace) -> List[Segment]:
+    """The winning-segment partition of ``[t_submit, t_complete]``.
+
+    Every instant of the window appears in exactly one segment; a
+    segment's category is the highest-priority span active there
+    (``other`` where no span covers).  Adjacent segments with the same
+    category and name are coalesced.
+    """
+    t0w, t1w = trace.t_submit, trace.t_complete
+    assert t1w is not None, "timeline() needs a completed trace"
+    if t1w <= t0w:
+        return []
+    clipped = []
+    for sp in trace.spans:
+        a, b = max(sp.t0, t0w), min(sp.t1, t1w)
+        if b > a:
+            clipped.append((a, b, priority(sp.cat), sp))
+    if not clipped:
+        return [("other", "uncovered", t0w, t1w)]
+    cuts = {t0w, t1w}
+    for a, b, _, _ in clipped:
+        cuts.add(a)
+        cuts.add(b)
+    points = sorted(cuts)
+    # sort spans once; walk them with a moving lower bound so the sweep
+    # is O((n + k) log n) over n spans and k cut points
+    clipped.sort(key=lambda e: e[0])
+    out: List[Segment] = []
+    idx = 0
+    heap: List[Tuple[int, float, int, Any]] = []
+    seq = 0
+    for i in range(len(points) - 1):
+        a, b = points[i], points[i + 1]
+        while idx < len(clipped) and clipped[idx][0] <= a:
+            ca, cb, prio, sp = clipped[idx]
+            heapq.heappush(heap, (prio, -cb, seq, sp))
+            seq += 1
+            idx += 1
+        # drop spans that ended at or before this interval's start
+        while heap and -heap[0][1] <= a:
+            heapq.heappop(heap)
+        if heap:
+            prio, negend, _, sp = heap[0]
+            cat, name = sp.cat, sp.name
+        else:
+            cat, name = "other", "uncovered"
+        if out and out[-1][0] == cat and out[-1][1] == name and \
+                out[-1][3] == a:
+            out[-1] = (cat, name, out[-1][2], b)
+        else:
+            out.append((cat, name, a, b))
+    return out
+
+
+def decompose(trace: InstanceTrace) -> Dict[str, float]:
+    """Exclusive per-category seconds summing exactly to e2e latency."""
+    out = {c: 0.0 for c in CATEGORIES}
+    for cat, _, a, b in timeline(trace):
+        out[cat] += b - a
+    return out
+
+
+def critical_path(trace: InstanceTrace) -> List[Segment]:
+    """The causal wait chain from submit to completion (see module doc).
+
+    Identical partition to :func:`timeline`; exposed under the name the
+    analysis reads as.  Segments are contiguous: ``seg[i][3] ==
+    seg[i+1][2]``, the first starts at ``t_submit``, the last ends at
+    ``t_complete``.
+    """
+    return timeline(trace)
+
+
+class BlameTable:
+    """Aggregate blame decompositions across completed instances.
+
+    Registered as a ``TraceRecorder.on_complete`` hook, so every sampled
+    completed instance lands here regardless of trace retention — the
+    aggregate covers the full sampled population while raw spans stay
+    bounded by the recorder's reservoir.
+    """
+
+    def __init__(self):
+        self.n = 0
+        self.totals: Dict[str, float] = {c: 0.0 for c in CATEGORIES}
+        self.stats: Dict[str, StageStats] = {c: StageStats()
+                                             for c in CATEGORIES}
+        self.e2e_total = 0.0
+
+    def add(self, trace: InstanceTrace) -> Dict[str, float]:
+        parts = decompose(trace)
+        self.n += 1
+        self.e2e_total += trace.e2e or 0.0
+        for cat, dt in parts.items():
+            self.totals[cat] += dt
+            self.stats[cat].observe(dt)
+        return parts
+
+    def merge(self, other: "BlameTable") -> "BlameTable":
+        """Fold another table in (e.g. per-slot tables combined)."""
+        self.n += other.n
+        self.e2e_total += other.e2e_total
+        for cat in CATEGORIES:
+            self.totals[cat] += other.totals[cat]
+            self.stats[cat].merge(other.stats[cat])
+        return self
+
+    def shares(self) -> Dict[str, float]:
+        tot = sum(self.totals.values())
+        if tot <= 0.0:
+            return {c: 0.0 for c in CATEGORIES}
+        return {c: v / tot for c, v in self.totals.items()}
+
+    def dominant(self) -> str:
+        """The category holding the most total time."""
+        return max(CATEGORIES, key=lambda c: self.totals[c])
+
+    def flat(self, prefix: str = "blame_") -> Dict[str, float]:
+        """Flat per-instance-mean milliseconds per category (+ top), the
+        shape benchmark rows and ``bench_explain`` diff."""
+        out: Dict[str, Any] = {}
+        n = max(self.n, 1)
+        for cat in CATEGORIES:
+            out[f"{prefix}{cat}_ms"] = round(
+                self.totals[cat] / n * 1e3, 4)
+        out[f"{prefix}top"] = self.dominant()
+        out[f"{prefix}n"] = self.n
+        return out
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Full serialization (exact totals + per-category sketches)."""
+        return {
+            "n": self.n,
+            "e2e_total_s": self.e2e_total,
+            "totals_s": dict(self.totals),
+            "shares": self.shares(),
+            "dominant": self.dominant(),
+            "stats": {c: st.to_dict() for c, st in self.stats.items()
+                      if st.count},
+        }

@@ -45,9 +45,10 @@ from repro.runtime import (CLUSTER_NET, AutoScaler, AutoscalePolicy,
                            Compute, FailureEvent, FaultInjector, Get,
                            NetProfile, Put, ReplicaScheduler, Runtime,
                            Scheduler, ShardLocalScheduler, StageStats,
-                           replace_gang_pins)
+                           TraceConfig, TraceRecorder, replace_gang_pins)
 from repro.runtime.batching import BatchCostModel
 from .batching import BatchPolicy, StageBatcher
+from .blame import BlameTable
 from .graph import INSTANCE, Stage, WorkflowGraph
 from .planner import AdaptiveBatchPolicy, BatchPlanner
 
@@ -261,7 +262,8 @@ class WorkflowRuntime:
                  admission: Optional[str] = None,
                  admission_margin: float = 0.0,
                  admission_defer: float = 0.02,
-                 admission_max_defer: float = 0.2):
+                 admission_max_defer: float = 0.2,
+                 tracing: Any = False):
         if not graph._validated:
             graph.validate()
         batching = batching or adaptive_batching
@@ -349,6 +351,17 @@ class WorkflowRuntime:
                           seed=seed, hedge_after=hedge_after,
                           log_tasks=log_tasks, node_profiles=profiles)
         self.store = store
+        # causal tracing + blame aggregation (``tracing`` is False, True,
+        # or a TraceConfig).  The recorder observes only: enabling it
+        # reproduces every latency byte-for-byte (tested).
+        self.tracer: Optional[TraceRecorder] = None
+        self.blame: Optional[BlameTable] = None
+        if tracing:
+            cfg = tracing if isinstance(tracing, TraceConfig) else None
+            self.tracer = TraceRecorder(cfg).attach(self.rt.sim)
+            self.blame = BlameTable()
+            self.tracer.on_complete.append(self.blame.add)
+            self.rt.trace_of = self._trace_of
         self.fault_injector: Optional[FaultInjector] = None
         self.fault_repins = 0
         self.planner: Optional[BatchPlanner] = None
@@ -403,6 +416,11 @@ class WorkflowRuntime:
                              pool_nodes=graph.nodes_of(pool),
                              name=stage.name)
 
+    def _trace_of(self, key: str):
+        """Executor hook: the live trace (if sampled) owning ``key`` —
+        stage tasks it launches get their op intervals categorized."""
+        return self.tracer.live.get(instance_of(key))
+
     def _make_policy(self, n_shards: int) -> PlacementPolicy:
         base = POLICIES[self.placement]()
         if self.read_replicas > 1:
@@ -416,9 +434,29 @@ class WorkflowRuntime:
         def task(ctx, key, value):
             inst = instance_of(key)
             rec = self.tracker.arrive(inst, stage.name, key, ctx.now)
+            tracer = self.tracer
+            tr = tracer.live.get(inst) if tracer is not None else None
+            if tr is not None:
+                # ingress: submit -> first stage activation (the trigger
+                # put's transfer + dispatch); remote-priced ⇒ network
+                t_in = tr.marks.pop("ingress", None)
+                if t_in is not None and ctx.now > t_in:
+                    cat = ("network"
+                           if ctx.now - t_in > tracer.local_cut
+                           else "other")
+                    tracer.span(tr, cat, "ingress", t_in, ctx.now)
             if stage.join and \
                     rec.arrivals[stage.name] < stage.expected_arrivals:
+                if tr is not None:
+                    # remember when the barrier opened (first arrival)
+                    tr.marks.setdefault(("join", stage.name), ctx.now)
                 return                              # barrier not ready
+            if tr is not None and stage.join:
+                t_first = tr.marks.pop(("join", stage.name), None)
+                if t_first is not None:
+                    # barrier skew: first input ready -> last input here
+                    tracer.span(tr, "barrier", f"join:{stage.name}",
+                                t_first, ctx.now)
             t0 = ctx.now
             seq = self.tracker.fire(inst, stage.name)
             if stage.body is not None:
@@ -450,6 +488,10 @@ class WorkflowRuntime:
         return task
 
     def _on_complete(self, instance: str) -> None:
+        if self.tracer is not None:
+            tr = self.tracer.live.get(instance)
+            if tr is not None:
+                self.tracer.complete(tr, self.rt.sim.now)
         if self.gang_pin and self.unpin_on_complete:
             label = instance_label(instance)
             for prefix in self._instance_pools:
@@ -480,6 +522,13 @@ class WorkflowRuntime:
         assert self.graph.instance_tracking, \
             "submit() needs an instance-tracked graph"
         assert "_" not in instance and "/" not in instance, instance
+        if self.tracer is not None:
+            # the blame window opens at the ORIGINAL submit time, so an
+            # admission defer shows up inside it (trace e2e may exceed
+            # tracker latency, which restarts at the admission instant)
+            tr = self.tracer.begin(instance, at)
+            if tr is not None:
+                tr.marks["ingress"] = at
         if self.admission is not None and deadline is not None:
             self.rt.sim.at(at, self._admission_check,
                            (instance, at, value, size, at + deadline))
@@ -574,6 +623,12 @@ class WorkflowRuntime:
                    + self.admission_planner.service_path(
                        self._min_active_speed))
         if now + est + self.admission_margin <= deadline_abs:
+            if self.tracer is not None:
+                tr = self.tracer.live.get(instance)
+                if tr is not None and now > t_submit:
+                    self.tracer.span(tr, "admission_defer", "admission",
+                                     t_submit, now)
+                    tr.marks["ingress"] = now
             self.tracker.admit(instance, now,
                                deadline=deadline_abs - now)
             key = workflow_key(self.graph.source_pool, instance,
@@ -595,6 +650,10 @@ class WorkflowRuntime:
             self.rt.sim.at(retry_at, self._admission_check, arg)
             return
         self.admission_rejects += 1
+        if self.tracer is not None:
+            self.tracer.instant(None, "admission_reject", now,
+                                {"instance": instance})
+            self.tracer.drop(instance)     # never ran: no blame record
         if self.autoscaler is not None:
             self.autoscaler.observe_reject()   # shed demand = pressure
 
@@ -695,6 +754,13 @@ class WorkflowRuntime:
         """Make every object of ``labels`` reachable at its (re-pinned)
         primary home, charging the copy bytes like any migration."""
         replicated = isinstance(pool.engine.policy, ReplicatedPlacement)
+        tracer = self.tracer
+        tr_of: Dict[str, Any] = {}
+        if tracer is not None:
+            for inst, tr in tracer.live.items():
+                lbl = instance_label(inst)
+                if lbl in labels:
+                    tr_of[lbl] = tr
         moved_groups = set()
         placed = set()
         for shard in list(pool.shards.values()):
@@ -717,6 +783,14 @@ class WorkflowRuntime:
                 if home.nodes:
                     self.rt.sim._charge_transfer(
                         self.rt.nodes[home.nodes[0]], rec.size)
+                    tr = tr_of.get(rec.affinity)
+                    if tr is not None:
+                        now = self.rt.sim.now
+                        tracer.span(
+                            tr, "migration", f"migrate:{pool.prefix}",
+                            now,
+                            now + self.rt.sim.net.transfer_time(rec.size),
+                            node=home.nodes[0], args={"bytes": rec.size})
                 self.store.invalidate_cached([key])
         self.store.stats.migrations += len(moved_groups)
 
@@ -779,4 +853,7 @@ class WorkflowRuntime:
         if self.autoscaler is not None:
             out["scale_events"] = len(self.autoscaler.decisions)
             out["node_seconds"] = round(self.autoscaler.node_seconds(), 4)
+        if self.blame is not None:
+            out.update(self.blame.flat())
+            out.update(self.tracer.summary())
         return out

@@ -7,6 +7,8 @@ window-timer coalescing in StageBatcher, and the end-to-end guarantee the
 fig9 benchmark records: one adaptive policy, no per-rate knobs, never
 worse than the hand-tuned static window.
 """
+import json
+
 import numpy as np
 import pytest
 
@@ -142,6 +144,108 @@ def test_p2_quantile_on_stationary_stream():
         exact = float(np.percentile(xs, q * 100))
         assert abs(sk.value() - exact) <= 0.05 * exact
     assert len(sk._h) == 5             # five markers, nothing retained
+
+
+def test_p2_quantile_tiny_streams_are_numpy_exact():
+    """Below five observations P² has no markers yet and must fall back
+    to the exact interpolated order statistic — including n == 0."""
+    assert P2Quantile(0.5).value() == 0.0
+    for n in range(1, 6):
+        xs = [3.0, 1.0, 4.0, 1.5, 9.0][:n]
+        for q in (0.1, 0.5, 0.9):
+            sk = P2Quantile(q)
+            for x in xs:
+                sk.observe(x)
+            assert sk.value() == pytest.approx(
+                float(np.percentile(xs, q * 100)), abs=1e-12)
+
+
+def test_p2_quantile_all_equal_stream():
+    """A constant stream must not wobble: every marker collapses onto
+    the value and the parabolic step must not divide by zero."""
+    for n in (3, 5, 100):
+        sk = P2Quantile(0.95)
+        for _ in range(n):
+            sk.observe(0.25)
+        assert sk.value() == 0.25
+
+
+def test_p2_quantile_extreme_tail_vs_numpy():
+    """p = 0.999 sits between the 4th and 5th marker; on a heavy-tailed
+    stream the estimate must stay within 10% of numpy's exact value."""
+    rng = np.random.default_rng(7)
+    xs = rng.lognormal(-3.0, 0.8, 200_000)
+    sk = P2Quantile(0.999)
+    for x in xs:
+        sk.observe(float(x))
+    exact = float(np.percentile(xs, 99.9))
+    assert abs(sk.value() - exact) <= 0.10 * exact
+
+
+def test_stage_stats_merge_matches_single_stream():
+    """Folding per-slot sketches must agree with one sketch that saw the
+    union stream: exact moments, near-identical quantiles."""
+    rng = np.random.default_rng(8)
+    xs = rng.exponential(0.01, 6_000)
+    whole = StageStats()
+    for x in xs:
+        whole.observe(float(x))
+    parts = [StageStats() for _ in range(3)]
+    for i, x in enumerate(xs):
+        parts[i % 3].observe(float(x))
+    merged = parts[0].merge(parts[1]).merge(parts[2])
+    assert merged is parts[0]
+    assert merged.count == whole.count == len(xs)
+    assert merged.mean == pytest.approx(whole.mean, rel=1e-12)
+    assert merged.min == whole.min and merged.max == whole.max
+    for q in (0.5, 0.95, 0.99):
+        assert merged.quantile(q) == whole.quantile(q)  # same histogram
+    # merging an empty sketch is the identity
+    before = merged.summary()
+    assert merged.merge(StageStats()).summary() == before
+
+
+def test_stage_stats_merge_exactness_rules():
+    """Two warm-up-resident sketches whose union still fits stay exact;
+    a union that overflows the buffer graduates to sketch-only."""
+    a, b = StageStats(exact_cap=16), StageStats(exact_cap=16)
+    for i in range(6):
+        a.observe(0.001 * (i + 1))
+        b.observe(0.002 * (i + 1))
+    a.merge(b)
+    assert a.exact and a.count == 12
+    xs = sorted([0.001 * (i + 1) for i in range(6)]
+                + [0.002 * (i + 1) for i in range(6)])
+    assert a.quantile(0.5) == pytest.approx(
+        float(np.percentile(xs, 50)), rel=1e-12)
+    big = StageStats(exact_cap=16)
+    for i in range(12):
+        big.observe(0.003 * (i + 1))
+    a.merge(big)                        # 24 > exact_cap: graduates
+    assert not a.exact and a.count == 24
+    # different binning geometry must be refused, not silently merged
+    with pytest.raises(AssertionError):
+        a.merge(StageStats(ratio=1.1))
+
+
+def test_stage_stats_dict_round_trip():
+    """to_dict -> from_dict preserves every observable: moments,
+    exactness, and quantiles — both in warm-up and sketch-only states."""
+    rng = np.random.default_rng(9)
+    for n in (0, 5, 40, 2_000):         # empty, tiny, buffered, graduated
+        st = StageStats(exact_cap=64)
+        for x in rng.exponential(0.01, n):
+            st.observe(float(x))
+        st2 = StageStats.from_dict(json.loads(json.dumps(st.to_dict())))
+        assert st2.count == st.count and st2.exact == st.exact
+        assert st2.mean == pytest.approx(st.mean, rel=1e-12)
+        if n:
+            assert (st2.min, st2.max) == (st.min, st.max)
+        for q in (0.0, 0.5, 0.95, 0.99, 1.0):
+            assert st2.quantile(q) == st.quantile(q)
+        # the round-tripped sketch keeps observing correctly
+        st2.observe(0.5)
+        assert st2.count == n + 1 and st2.max == 0.5
 
 
 # -- InstanceTracker: long-horizon bounded memory -----------------------------

@@ -17,6 +17,7 @@ WORKFLOWS_DOC = DOCS / "workflows.md"
 BATCHING_DOC = DOCS / "batching.md"
 ELASTICITY_DOC = DOCS / "elasticity.md"
 FAULTS_DOC = DOCS / "faults.md"
+OBSERVABILITY_DOC = DOCS / "observability.md"
 
 
 def fenced_python_blocks(text: str):
@@ -53,11 +54,12 @@ def test_docs_exist():
     assert BATCHING_DOC.exists()
     assert ELASTICITY_DOC.exists()
     assert FAULTS_DOC.exists()
+    assert OBSERVABILITY_DOC.exists()
 
 
 @pytest.mark.parametrize("doc", [API_DOC, ARCH_DOC, WORKFLOWS_DOC,
                                  BATCHING_DOC, ELASTICITY_DOC,
-                                 FAULTS_DOC])
+                                 FAULTS_DOC, OBSERVABILITY_DOC])
 def test_all_qualified_names_resolve(doc):
     names = qualified_names(doc.read_text())
     assert names, f"{doc.name} should document qualified repro.* symbols"
@@ -73,7 +75,8 @@ def test_all_qualified_names_resolve(doc):
 @pytest.mark.parametrize(
     "doc_idx_snippet",
     [(doc, i, snip) for doc in (API_DOC, WORKFLOWS_DOC, BATCHING_DOC,
-                                ELASTICITY_DOC, FAULTS_DOC)
+                                ELASTICITY_DOC, FAULTS_DOC,
+                                OBSERVABILITY_DOC)
      for i, snip in enumerate(fenced_python_blocks(doc.read_text()))],
     ids=lambda p: f"{p[0].stem}-snippet{p[1]}")
 def test_doc_snippets_run(doc_idx_snippet):

@@ -185,3 +185,43 @@ def test_heterogeneous_rows_price_decode_by_tier(model_and_params):
     _, mu = uni.turn("s0", [1, 2], gen_tokens=4)
     assert mf.decode_time < mb.decode_time      # 2x gpu speed
     assert mu.decode_time == mb.decode_time     # uniform == identity
+
+
+def test_turn_traces_decompose_to_e2e(model_and_params):
+    """Every traced turn's spans telescope exactly over its virtual
+    window and the blame decomposition sums to the turn's e2e; random
+    routing must surface migration spans carrying the moved bytes."""
+    from repro.runtime import TraceRecorder
+    from repro.workflows import decompose
+
+    cfg, model, params = model_and_params
+    rec = TraceRecorder()
+    eng = ServingEngine(model, params, n_rows=3, max_slots=6, max_seq=64,
+                        policy="random", tracer=rec)
+    drive(eng)
+    traces = rec.traces()
+    assert rec.n_completed == len(eng.metrics) == len(traces) == 18
+    totals = {}
+    for tr in traces:
+        sid, turn = tr.instance.split(":")
+        assert sid in eng.sessions and turn.isdigit()
+        parts = decompose(tr)
+        assert abs(sum(parts.values()) - tr.e2e) < 1e-9
+        spans = sorted(tr.spans, key=lambda sp: sp.t0)
+        assert spans and {sp.cat for sp in spans} >= {"compute"}
+        # telescoping: first span opens at submit, last closes at
+        # complete, no span starts before its predecessor ends
+        assert spans[0].t0 >= tr.t_submit - 1e-12
+        assert spans[-1].t1 == pytest.approx(tr.t_complete, abs=1e-12)
+        for a, b in zip(spans, spans[1:]):
+            assert b.t0 >= a.t1 - 1e-12
+        for c, v in parts.items():
+            totals[c] = totals.get(c, 0.0) + v
+    assert totals["compute"] > 0.0
+    migrated = [tr for tr in traces
+                if any(sp.cat == "migration" for sp in tr.spans)]
+    assert migrated, "random routing should migrate at least one turn"
+    for tr in migrated:
+        sp = next(s for s in tr.spans if s.cat == "migration")
+        assert sp.name == "session_migrate" and sp.args["bytes"] > 0
+    assert totals["migration"] > 0.0
