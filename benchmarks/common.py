@@ -99,9 +99,13 @@ WALL_METRICS = {"wall_s", "sim_wall_s"}
 
 # suite-specific thresholds layered on the defaults: fig11's chaos
 # counters are hard floors — a single lost instance, or late completions
-# creeping past 10%, is a fault-tolerance regression worth a warn line
+# creeping past 10%, is a fault-tolerance regression worth a warn line.
+# fig12's recovery-correctness counters are the same: one lost session,
+# one duplicate group effect, or one shed turn is a failover regression
 SUITE_DELTA_METRICS = {
     "fig11": {**DELTA_METRICS, "lost": 0.0, "late_completions": 0.10},
+    "fig12": {**DELTA_METRICS, "lost_sessions": 0.0, "dup_effects": 0.0,
+              "shed_turns": 0.0, "order_violations": 0.0},
 }
 
 

@@ -5,12 +5,18 @@ and in order (e.g. frames of one video stream); groups with different keys
 are independent and run in parallel.  Because a group lives entirely in one
 shard, group-atomic multi-object updates need no cross-shard coordination —
 the paper notes this fell out of the design for free.
+
+These primitives are the correctness backbone of recovery: the workflow
+runtime's ``exactly_once`` mode parks replayed firings in a
+:class:`GroupSequencer` so failover/retry/hedge duplicates cannot reorder
+a group's deliveries, and gang repair moves a stranded group's objects
+through :meth:`AtomicGroupUpdate.move_group` so a mid-repair fault cannot
+leave the group half-migrated.
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import defaultdict, deque
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 from .object_store import CascadeStore
 
@@ -21,29 +27,49 @@ class GroupSequencer:
     ``admit(label, item)`` enqueues; ``ready(label)`` yields the next item
     only when the previous one for that group was ``complete``d.  Different
     labels never block each other.
+
+    Memory is bounded by the number of labels with work *currently* in
+    flight: a label's queue entry is pruned the moment it drains, and the
+    busy marker is a set, so a sequencer that has seen a million distinct
+    groups over a run's lifetime holds state only for the active ones.
+    ``ready``/``complete``/``pending`` on an unknown (or pruned) label are
+    cheap no-ops — callers retire labels without unregistering them.
     """
 
     def __init__(self):
-        self._queues: Dict[str, Deque[Any]] = defaultdict(deque)
-        self._busy: Dict[str, bool] = defaultdict(bool)
+        self._queues: Dict[str, Deque[Any]] = {}
+        self._busy: set = set()
         self.max_queue_len: int = 0
 
     def admit(self, label: str, item: Any) -> None:
-        q = self._queues[label]
+        q = self._queues.get(label)
+        if q is None:
+            q = self._queues[label] = deque()
         q.append(item)
         self.max_queue_len = max(self.max_queue_len, len(q))
 
     def ready(self, label: str) -> Optional[Any]:
-        if self._busy[label] or not self._queues[label]:
+        if label in self._busy:
             return None
-        self._busy[label] = True
-        return self._queues[label].popleft()
+        q = self._queues.get(label)
+        if not q:
+            return None
+        item = q.popleft()
+        if not q:
+            del self._queues[label]     # prune: bounded by in-flight labels
+        self._busy.add(label)
+        return item
 
     def complete(self, label: str) -> None:
-        self._busy[label] = False
+        self._busy.discard(label)
 
     def pending(self, label: str) -> int:
-        return len(self._queues[label]) + (1 if self._busy[label] else 0)
+        return (len(self._queues.get(label, ()))
+                + (1 if label in self._busy else 0))
+
+    def n_labels(self) -> int:
+        """Labels currently holding any state (the memory bound)."""
+        return len(self._queues.keys() | self._busy)
 
     def drain_ready(self) -> List[Tuple[str, Any]]:
         out = []
@@ -59,19 +85,72 @@ class AtomicGroupUpdate:
 
     Single-shard residency makes this a local transaction: we verify every
     key homes to the same shard, then apply the batch under one version.
+    A put that fails mid-batch rolls the already-applied prefix back to
+    the pre-batch records, so readers never observe a partial group write.
     """
 
     def __init__(self, store: CascadeStore):
         self.store = store
 
     def apply(self, puts: List[Tuple[str, Any]]) -> str:
-        assert puts, "empty atomic update"
+        if not puts:
+            raise ValueError("empty atomic update")
         shards = {self.store.shard_of(k).name for k, _ in puts}
         labels = {self.store.affinity_of(k) for k, _ in puts}
         if len(labels) != 1:
             raise ValueError(f"atomic update spans affinity groups: {labels}")
         if len(shards) != 1:
             raise ValueError(f"group split across shards: {shards}")
-        for k, v in puts:
-            self.store.put(k, v, fire=False)
+        # stage: snapshot every record this batch may touch (replicas
+        # included) before mutating anything
+        prior = []
+        for k, _ in puts:
+            for pool in self.store.pools.values():
+                if not k.startswith(pool.prefix):
+                    continue
+                for shard in pool.shards.values():
+                    prior.append((shard, k, shard.objects.get(k)))
+        try:
+            for k, v in puts:
+                self.store.put(k, v, fire=False)
+        except Exception:
+            # commit failed: restore the staged snapshot so the group is
+            # either fully updated or untouched
+            for shard, k, rec in prior:
+                if rec is None:
+                    shard.objects.pop(k, None)
+                else:
+                    shard.objects[k] = rec
+            raise
         return labels.pop()
+
+    # -- gang-repair commit --------------------------------------------------
+
+    def move_group(self, pool, label: str,
+                   moves: List[Tuple[Any, str, Any]],
+                   keep_source: bool = False) -> int:
+        """All-or-nothing relocation of one group's records within ``pool``.
+
+        ``moves`` is ``[(src_shard, key, record), ...]``; every record must
+        carry affinity ``label`` and every key must home to one destination
+        shard (single-shard residency is what makes the commit local).
+        Validation happens before any mutation; the commit itself is plain
+        dict surgery that cannot fail midway, so repair never leaves a
+        group with some objects moved and some stranded.  Returns the
+        number of records moved.
+        """
+        if not moves:
+            raise ValueError("empty atomic move")
+        homes = {pool.home(k).name for _, k, _ in moves}
+        if len(homes) != 1:
+            raise ValueError(f"group move split across shards: {homes}")
+        labels = {rec.affinity for _, _, rec in moves}
+        if labels != {label}:
+            raise ValueError(
+                f"atomic move spans affinity groups: {labels} != {label!r}")
+        home = pool.shards[homes.pop()]
+        for src, key, rec in moves:            # staged: commit cannot fail
+            home.objects[key] = rec
+            if not keep_source and src.name != home.name:
+                del src.objects[key]
+        return len(moves)

@@ -9,7 +9,7 @@ from .scheduler import (LeastLoadedScheduler, RandomScheduler,
                         node_load)
 from .executor import Runtime, TaskContext
 from .faults import (AvailabilityReport, FailureEvent, FaultInjector,
-                     set_straggler)
+                     RetryPolicy, set_straggler)
 from .autoscale import (AutoScaler, AutoscalePolicy, ScaleDecision,
                         replace_gang_pins)
 from .tracing import (CATEGORIES, InstanceTrace, Span, TraceConfig,
@@ -25,7 +25,8 @@ __all__ = [
     "LeastLoadedScheduler", "RandomScheduler", "ReplicaScheduler",
     "Scheduler", "ShardLocalScheduler", "node_load",
     "Runtime", "TaskContext",
-    "AvailabilityReport", "FailureEvent", "FaultInjector", "set_straggler",
+    "AvailabilityReport", "FailureEvent", "FaultInjector", "RetryPolicy",
+    "set_straggler",
     "AutoScaler", "AutoscalePolicy", "ScaleDecision", "replace_gang_pins",
     "CATEGORIES", "InstanceTrace", "Span", "TraceConfig", "TraceRecorder",
 ]

@@ -1,4 +1,5 @@
-"""Fault injection + tolerance: node failures, shard failover, stragglers.
+"""Fault injection + tolerance: node failures, shard failover, stragglers,
+bounded retry budgets, and serving-row outages.
 
 Failure semantics mirror a replicated Cascade deployment:
   * when a node dies, compute admissions still queued on it are
@@ -12,20 +13,56 @@ Failure semantics mirror a replicated Cascade deployment:
     accounting (``Simulator.kick``) and then notifies listeners;
   * stragglers are modeled as per-node service-speed multipliers.
 
+With a :class:`RetryPolicy`, a stalled entry is not abandoned to the
+recovery kick: the injector probes it on an exponential backoff schedule
+and fails it over the moment *any* shard member is back up — bounded by
+``max_attempts`` and ``timeout``, after which the entry degrades to the
+plain stall-until-recovery path (liveness is never lost, only the eager
+re-dispatch).  The same policy class prices serving-turn retries in
+``repro.serving.ServingEngine``, so both planes share one budget
+vocabulary.
+
 The injector is deliberately layer-blind: it only flips ``Node.up`` and
 moves typed queue entries.  Higher layers subscribe via ``on_down`` /
 ``on_up`` to react in their own vocabulary — the workflow runtime re-pins
 stranded gangs and migrates their objects, the autoscaler reads the down
 fraction as SLO pressure, the stage batcher hedges batches stuck behind a
-dead or straggling slot.
+dead or straggling slot.  Serving rows are driven through the same
+injector (``fail_row``): the engine owns the mechanics (failing in-flight
+turns, re-routing session groups, pricing recovery), the injector owns
+the schedule and the unified :class:`FailureEvent` record.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Any, Callable, List, Optional
 
 from .executor import Runtime
 from .simulation import _ComputeStart
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry/timeout/backoff budget for remote operations.
+
+    ``max_attempts`` counts every attempt including the first dispatch;
+    backoff before re-attempt ``k`` (1-based) is
+    ``min(backoff * multiplier**(k-1), max_backoff)``.  ``timeout`` is the
+    deadline-aware give-up: measured from the first failure, no re-attempt
+    is scheduled past it.  Exhausting the budget degrades gracefully —
+    DES entries fall back to stall-until-recovery, serving turns shed to
+    the caller (admission's problem, not an infinite retry loop's).
+    """
+    max_attempts: int = 3
+    backoff: float = 0.01
+    multiplier: float = 2.0
+    max_backoff: float = 1.0
+    timeout: Optional[float] = None
+
+    def backoff_of(self, attempt: int) -> float:
+        """Backoff before re-attempt ``attempt`` (1-based)."""
+        return min(self.backoff * self.multiplier ** (attempt - 1),
+                   self.max_backoff)
 
 
 @dataclasses.dataclass
@@ -34,13 +71,24 @@ class FailureEvent:
 
     ``failed_over`` counts queued compute admissions re-dispatched to a
     surviving replica at down time; ``stalled`` counts entries that had no
-    replica to go to and waited out the outage in place.
+    replica to go to and waited out the outage in place.  ``retries`` /
+    ``retry_failovers`` / ``retries_exhausted`` account the backoff probes
+    a :class:`RetryPolicy` fires against stalled entries.  The serving
+    counters (``turns_failed``, ``sessions_displaced``,
+    ``groups_rerouted``) are filled by the engine when the event targets a
+    serving row instead of a DES node.
     """
     node: str
     t_down: float
     t_up: float
     failed_over: int = 0
     stalled: int = 0
+    retries: int = 0
+    retry_failovers: int = 0
+    retries_exhausted: int = 0
+    turns_failed: int = 0
+    sessions_displaced: int = 0
+    groups_rerouted: int = 0
 
 
 @dataclasses.dataclass
@@ -49,23 +97,32 @@ class AvailabilityReport:
     downtime: float
     tasks_failed_over: int
     tasks_stalled: int
+    tasks_retried: int = 0
+    turns_failed: int = 0
+    sessions_displaced: int = 0
 
 
 class FaultInjector:
-    """Schedules node outages against a :class:`Runtime`'s simulator.
+    """Schedules outages against a :class:`Runtime`'s simulator and/or a
+    serving engine's rows.
 
     ``on_down`` / ``on_up`` listeners are called as ``fn(event)`` after the
     injector has finished its own queue surgery, so listeners observe a
     consistent node state (``up`` flag set, queues settled).
     """
 
-    def __init__(self, runtime: Runtime):
+    def __init__(self, runtime: Optional[Runtime] = None,
+                 serving: Optional[Any] = None,
+                 retry: Optional[RetryPolicy] = None):
         self.rt = runtime
+        self.serving = serving
+        self.retry = retry
         self.events: List[FailureEvent] = []
         self.on_down: List[Callable[[FailureEvent], None]] = []
         self.on_up: List[Callable[[FailureEvent], None]] = []
 
     def fail_node(self, node: str, at: float, duration: float) -> FailureEvent:
+        assert self.rt is not None, "fail_node needs a DES runtime"
         if node not in self.rt.nodes:
             raise KeyError(f"unknown node {node!r}")
         ev = FailureEvent(node=node, t_down=at, t_up=at + duration)
@@ -74,11 +131,24 @@ class FaultInjector:
         self.rt.sim.at(ev.t_up, self._up, ev)
         return ev
 
+    def fail_row(self, row: int, at: float, duration: float) -> FailureEvent:
+        """Schedule a serving-row outage; the engine owns the semantics
+        (in-flight turns fail, sessions lose state and re-route, recovery
+        is priced per session) — see ``ServingEngine.fail_row``."""
+        assert self.serving is not None, "fail_row needs a serving engine"
+        ev = self.serving.fail_row(row, at, duration)
+        self.events.append(ev)
+        return ev
+
     def report(self) -> AvailabilityReport:
         return AvailabilityReport(
             downtime=sum(ev.t_up - ev.t_down for ev in self.events),
             tasks_failed_over=sum(ev.failed_over for ev in self.events),
-            tasks_stalled=sum(ev.stalled for ev in self.events))
+            tasks_stalled=sum(ev.stalled for ev in self.events),
+            tasks_retried=sum(ev.retries for ev in self.events),
+            turns_failed=sum(ev.turns_failed for ev in self.events),
+            sessions_displaced=sum(ev.sessions_displaced
+                                   for ev in self.events))
 
     # -- event bodies -------------------------------------------------------
 
@@ -105,14 +175,50 @@ class FaultInjector:
                     target = self._failover_target(ev.node)
                 if target is None:
                     # no replica (or unmovable entry): stall until recovery
-                    q.append((enq, fn))
+                    entry = (enq, fn)
+                    q.append(entry)
                     ev.stalled += 1
+                    if self.retry is not None and \
+                            isinstance(fn, _ComputeStart):
+                        sim.at(sim.now + self.retry.backoff_of(1),
+                               self._retry_probe,
+                               (ev, resource, entry, 2))
                 else:
                     ev.failed_over += 1
                     sim.requeue_compute(fn, self.rt.nodes[target],
                                         enq_time=enq)
         for fn in self.on_down:
             fn(ev)
+
+    def _retry_probe(self, arg) -> None:
+        """One backoff probe for a stalled entry: fail it over if any
+        shard member recovered, else re-arm within the budget.  Attempt
+        numbers are 1-based over *placements* (the initial dispatch was
+        attempt 1), so probes stop at ``max_attempts`` placements total —
+        the budget invariant the chaos property test asserts."""
+        ev, resource, entry, attempt = arg
+        node = self.rt.nodes[ev.node]
+        if node.up or entry not in node.queues[resource]:
+            return      # recovery (or an earlier probe) already owns it
+        ev.retries += 1
+        target = self._failover_target(ev.node)
+        if target is not None:
+            node.queues[resource].remove(entry)
+            enq, fn = entry
+            ev.retry_failovers += 1
+            self.rt.sim.requeue_compute(fn, self.rt.nodes[target],
+                                        enq_time=enq)
+            return
+        sim = self.rt.sim
+        if attempt < self.retry.max_attempts:
+            delay = self.retry.backoff_of(attempt)
+            if self.retry.timeout is None or \
+                    sim.now + delay <= ev.t_down + self.retry.timeout:
+                sim.at(sim.now + delay, self._retry_probe,
+                       (ev, resource, entry, attempt + 1))
+                return
+        # budget exhausted: graceful degradation to stall-until-recovery
+        ev.retries_exhausted += 1
 
     def _up(self, ev: FailureEvent) -> None:
         node = self.rt.nodes[ev.node]

@@ -54,9 +54,9 @@ from .simulation import (BatchCompute, Compute, Get, Put, Sleep, Trigger,
 #: explained by a stall, which outranks the passive waits.  The blame
 #: sweep (``repro.workflows.blame``) charges every instant of an
 #: instance's e2e window to exactly one of these.
-CATEGORIES = ("compute", "network", "migration", "fault_stall",
-              "queueing", "batch_wait", "barrier", "admission_defer",
-              "other")
+CATEGORIES = ("compute", "network", "migration", "recovery",
+              "fault_stall", "retry", "queueing", "batch_wait", "barrier",
+              "admission_defer", "other")
 
 _PRIORITY = {c: i for i, c in enumerate(CATEGORIES)}
 

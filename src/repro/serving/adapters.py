@@ -56,6 +56,17 @@ class AdapterStore:
     def register(self, adapter: LoRAAdapter) -> None:
         self.adapters[adapter.name] = adapter
 
+    def peek_bytes(self, row: int, name: Optional[str]) -> int:
+        """Fetch bytes ``ensure_resident`` WOULD charge, without fetching —
+        the planning half of a turn attempt must not mutate residency."""
+        if name is None or name in self.resident[row]:
+            return 0
+        return self.adapters[name].nbytes
+
+    def drop_row(self, row: int) -> None:
+        """A dead row loses its resident adapters with its memory."""
+        self.resident[row].clear()
+
     def ensure_resident(self, row: int, name: Optional[str]) -> int:
         """Returns bytes that had to be fetched to make `name` resident."""
         if name is None or name in self.resident[row]:

@@ -52,3 +52,10 @@ def clear_slot(row_cache: Any, slot: int) -> Any:
     def z(dst):
         return dst.at[:, slot].set(jnp.zeros_like(dst[:, slot]))
     return jax.tree_util.tree_map(z, row_cache)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def reset_cache(row_cache: Any) -> Any:
+    """Zero every slot — a dead row's memory is gone, so recovery starts
+    from a blank cache (cheaper than re-allocating via ``init_cache``)."""
+    return jax.tree_util.tree_map(jnp.zeros_like, row_cache)

@@ -11,7 +11,7 @@ pay a state-migration penalty whenever the row changes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 from repro.core import (CallableAffinity, Descriptor, PlacementEngine,
                         stable_hash)
@@ -27,6 +27,17 @@ class Session:
     turns: int = 0
     migrations: int = 0
     migrated_bytes: int = 0
+    # -- recovery state (serving fault tolerance) ---------------------------
+    # the exact token sequence fed into the decode cache (prompts + the
+    # replayed decode inputs): replaying it through the prefill path
+    # reconstructs the cache bit-for-bit, so losing a row never loses a
+    # session — only time
+    transcript: List[int] = dataclasses.field(default_factory=list)
+    lost_state: bool = False         # row died under us; state must rebuild
+    ckpt: Any = None                 # periodic KV snapshot (device tree)
+    ckpt_len: int = 0                # transcript prefix the snapshot covers
+    recoveries: int = 0
+    shed: int = 0                    # turns given up after retry budget
 
 
 class SessionRouter:

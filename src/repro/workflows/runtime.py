@@ -36,16 +36,18 @@ import dataclasses
 from collections import defaultdict
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core import (CascadeStore, HashPlacement, InstanceAffinity,
+from repro.core import (AtomicGroupUpdate, CascadeStore, GroupSequencer,
+                        HashPlacement, InstanceAffinity,
                         LoadAwarePlacement, RendezvousPlacement,
                         ReplicatedPlacement, instance_label, instance_of,
                         workflow_key)
 from repro.core.placement import PlacementPolicy
 from repro.runtime import (CLUSTER_NET, AutoScaler, AutoscalePolicy,
                            Compute, FailureEvent, FaultInjector, Get,
-                           NetProfile, Put, ReplicaScheduler, Runtime,
-                           Scheduler, ShardLocalScheduler, StageStats,
-                           TraceConfig, TraceRecorder, replace_gang_pins)
+                           NetProfile, Put, ReplicaScheduler, RetryPolicy,
+                           Runtime, Scheduler, ShardLocalScheduler,
+                           SimFuture, StageStats, TraceConfig,
+                           TraceRecorder, WaitFor, replace_gang_pins)
 from repro.runtime.batching import BatchCostModel
 from .batching import BatchPolicy, StageBatcher
 from .blame import BlameTable
@@ -263,6 +265,7 @@ class WorkflowRuntime:
                  admission_margin: float = 0.0,
                  admission_defer: float = 0.02,
                  admission_max_defer: float = 0.2,
+                 exactly_once: bool = False,
                  tracing: Any = False):
         if not graph._validated:
             graph.validate()
@@ -276,6 +279,8 @@ class WorkflowRuntime:
             "admission control needs an instance-tracked graph"
         assert hedge_after is None or batching, \
             "hedged execution rides the StageBatcher (batching=True)"
+        assert not (exactly_once and not graph.instance_tracking), \
+            "exactly_once needs an instance-tracked graph"
         self.graph = graph
         self.grouped = grouped
         self.placement = placement
@@ -284,6 +289,16 @@ class WorkflowRuntime:
         self.unpin_on_complete = unpin_on_complete
         self.tracker = InstanceTracker(graph,
                                        evict_completed=evict_completed)
+        # exactly-once ordered delivery (paper §3.4 wired into recovery):
+        # a GroupSequencer gates stage bodies per instance label so
+        # failover / retry / hedge replays cannot reorder one group's
+        # stage executions, and duplicated trigger deliveries dedupe on
+        # the idempotence key (pool/instance/stage/seq is the object key)
+        self.exactly_once = exactly_once
+        self.sequencer: Optional[GroupSequencer] = \
+            GroupSequencer() if exactly_once else None
+        self.dup_triggers_dropped = 0
+        self.on_sequenced: Optional[Any] = None  # hook(label, stage, key, t)
 
         nodes: List[str] = []
         resources: Dict[str, Dict[str, int]] = {}
@@ -433,6 +448,17 @@ class WorkflowRuntime:
     def _make_task(self, stage: Stage):
         def task(ctx, key, value):
             inst = instance_of(key)
+            if self.exactly_once:
+                # idempotence: the object key doubles as the delivery's
+                # idempotence key (pool/instance/stage-seq/index), so a
+                # replayed trigger re-delivers a key this stage already
+                # saw — dropping it keeps arrival counts and join
+                # barriers exact under duplicated puts
+                rec0 = self.tracker.records.get(inst)
+                if rec0 is not None and \
+                        key in rec0.inputs.get(stage.name, ()):
+                    self.dup_triggers_dropped += 1
+                    return
             rec = self.tracker.arrive(inst, stage.name, key, ctx.now)
             tracer = self.tracer
             tr = tracer.live.get(inst) if tracer is not None else None
@@ -457,34 +483,59 @@ class WorkflowRuntime:
                     # barrier skew: first input ready -> last input here
                     tracer.span(tr, "barrier", f"join:{stage.name}",
                                 t_first, ctx.now)
+            lbl = None
+            if self.sequencer is not None:
+                # per-group FIFO: park this firing until every earlier
+                # firing of the same instance label released the gate —
+                # ordered replay across failover / retry / hedge
+                # duplicates.  The gate sits AFTER the join barrier so a
+                # parked firing never withholds a barrier arrival.
+                lbl = instance_label(inst)
+                gate = SimFuture()
+                self.sequencer.admit(lbl, gate)
+                head = self.sequencer.ready(lbl)
+                if head is not None:       # uncontended: our own gate
+                    ctx.runtime.sim.resolve(head)
+                yield WaitFor(gate)
+                if self.on_sequenced is not None:
+                    self.on_sequenced(lbl, stage.name, key, ctx.now)
             t0 = ctx.now
             seq = self.tracker.fire(inst, stage.name)
-            if stage.body is not None:
-                yield from stage.body(ctx, key, value)
-            else:
-                if stage.join:
-                    # fan-in: fetch every input that arrived before us
-                    for k in rec.inputs[stage.name]:
-                        if k != key:
-                            yield Get(k, required=False)
-                for r in stage.reads:
-                    for k in r.keys(inst):
-                        yield Get(k, required=r.required, wait=r.wait)
-                if stage.cost > 0:
-                    if self.batcher is not None and stage.batchable:
-                        yield from self.batcher.compute(
-                            ctx, stage, deadline=rec.deadline)
-                    else:
-                        yield Compute(stage.resource, stage.cost)
-                for e in stage.emits:
-                    for i in range(e.fanout):
-                        yield Put(workflow_key(e.pool, inst,
-                                               f"{stage.name}{seq}", i),
-                                  ("wf", inst, stage.name, seq, i),
-                                  size=e.size)
-            self.tracker.stage_done(inst, stage.name, t0, ctx.now)
-            if rec.t_complete is not None and rec.t_complete == ctx.now:
-                self._on_complete(inst)
+            try:
+                if stage.body is not None:
+                    yield from stage.body(ctx, key, value)
+                else:
+                    if stage.join:
+                        # fan-in: fetch every input that arrived before us
+                        for k in rec.inputs[stage.name]:
+                            if k != key:
+                                yield Get(k, required=False)
+                    for r in stage.reads:
+                        for k in r.keys(inst):
+                            yield Get(k, required=r.required, wait=r.wait)
+                    if stage.cost > 0:
+                        if self.batcher is not None and stage.batchable:
+                            yield from self.batcher.compute(
+                                ctx, stage, deadline=rec.deadline)
+                        else:
+                            yield Compute(stage.resource, stage.cost)
+                    for e in stage.emits:
+                        for i in range(e.fanout):
+                            yield Put(workflow_key(e.pool, inst,
+                                                   f"{stage.name}{seq}", i),
+                                      ("wf", inst, stage.name, seq, i),
+                                      size=e.size)
+                self.tracker.stage_done(inst, stage.name, t0, ctx.now)
+                if rec.t_complete is not None and rec.t_complete == ctx.now:
+                    self._on_complete(inst)
+            finally:
+                if lbl is not None:
+                    # release the gate even if the body died mid-flight
+                    # (a failed task must not wedge its group forever)
+                    self.sequencer.complete(lbl)
+                    nxt = self.sequencer.ready(lbl)
+                    if nxt is not None:
+                        ctx.runtime.sim.resolve(nxt)
         return task
 
     def _on_complete(self, instance: str) -> None:
@@ -690,7 +741,8 @@ class WorkflowRuntime:
 
     # -- fault tolerance ----------------------------------------------------
 
-    def enable_faults(self) -> FaultInjector:
+    def enable_faults(self,
+                      retry: Optional[RetryPolicy] = None) -> FaultInjector:
         """Create (once) a :class:`repro.runtime.FaultInjector` against
         this runtime and wire workflow-atomic repair to it: on a node
         death that leaves a slot with no live member, every gang pinned
@@ -700,9 +752,15 @@ class WorkflowRuntime:
         autoscaler needs no extra wiring — its pressure reads ``Node.up``
         directly — and hedged batching reacts through the batch future,
         so the three repair layers compose without ordering constraints.
+
+        ``retry`` arms bounded retry probes on stalled tasks: instead of
+        sleeping until the dead node recovers, a stranded compute is
+        re-dispatched to a surviving replica shard after an exponential
+        backoff, up to ``retry.max_attempts`` within ``retry.timeout``
+        (exhaustion degrades to the stall-until-recovery baseline).
         """
         if self.fault_injector is None:
-            inj = FaultInjector(self.rt)
+            inj = FaultInjector(self.rt, retry=retry)
             inj.on_down.append(self._on_node_down)
             self.fault_injector = inj
         return self.fault_injector
@@ -752,7 +810,17 @@ class WorkflowRuntime:
 
     def _migrate_stranded(self, pool, labels) -> None:
         """Make every object of ``labels`` reachable at its (re-pinned)
-        primary home, charging the copy bytes like any migration."""
+        primary home, charging the copy bytes like any migration.
+
+        The relocation commits per group through
+        :meth:`repro.core.AtomicGroupUpdate.move_group`: a stranded
+        group's records move all-or-nothing, so a fault arriving during
+        gang repair can never leave a group half-migrated (some keys at
+        the new home, some marooned on the dead slot).  Replication 1
+        moves (the dead copy is the only other one and keeping it would
+        resurrect stale data if the label ever hashes back); replicated
+        pools top up the missing copy and keep the source replicas.
+        """
         replicated = isinstance(pool.engine.policy, ReplicatedPlacement)
         tracer = self.tracer
         tr_of: Dict[str, Any] = {}
@@ -761,7 +829,8 @@ class WorkflowRuntime:
                 lbl = instance_label(inst)
                 if lbl in labels:
                     tr_of[lbl] = tr
-        moved_groups = set()
+        # stage: collect every stranded record per group, mutating nothing
+        staged: Dict[str, List[Tuple[Any, str, Any]]] = {}
         placed = set()
         for shard in list(pool.shards.values()):
             for key, rec in list(shard.objects.items()):
@@ -772,18 +841,19 @@ class WorkflowRuntime:
                     placed.add(key)
                     continue
                 placed.add(key)
-                home.objects[key] = rec
-                if not replicated:
-                    # replication 1: a move — the dead copy is the only
-                    # other one and keeping it would resurrect stale data
-                    # at the old home if the label ever hashes back
-                    del shard.objects[key]
-                moved_groups.add(rec.affinity)
+                staged.setdefault(rec.affinity, []).append(
+                    (shard, key, rec))
+        # commit: one atomic move per group, then charge the copies
+        mover = AtomicGroupUpdate(self.store)
+        for label, moves in staged.items():
+            mover.move_group(pool, label, moves, keep_source=replicated)
+            for _, key, rec in moves:
+                home = pool.home(key)
                 self.store.stats.bytes_migrated += rec.size
                 if home.nodes:
                     self.rt.sim._charge_transfer(
                         self.rt.nodes[home.nodes[0]], rec.size)
-                    tr = tr_of.get(rec.affinity)
+                    tr = tr_of.get(label)
                     if tr is not None:
                         now = self.rt.sim.now
                         tracer.span(
@@ -792,7 +862,7 @@ class WorkflowRuntime:
                             now + self.rt.sim.net.transfer_time(rec.size),
                             node=home.nodes[0], args={"bytes": rec.size})
                 self.store.invalidate_cached([key])
-        self.store.stats.migrations += len(moved_groups)
+        self.store.stats.migrations += len(staged)
 
     # -- gang placement -----------------------------------------------------
 
@@ -847,6 +917,11 @@ class WorkflowRuntime:
             out["fault_failovers"] = rep.tasks_failed_over
             out["fault_stalled"] = rep.tasks_stalled
             out["fault_repins"] = self.fault_repins
+            if self.fault_injector.retry is not None:
+                out["fault_retries"] = rep.tasks_retried
+        if self.exactly_once:
+            out["dup_triggers_dropped"] = self.dup_triggers_dropped
+            out["seq_max_queue"] = self.sequencer.max_queue_len
         if self.admission is not None:
             out["admission_rejects"] = self.admission_rejects
             out["admission_deferrals"] = self.admission_deferrals

@@ -131,6 +131,103 @@ def test_atomic_group_update():
     with pytest.raises(ValueError):
         AtomicGroupUpdate(store).apply([
             ("/positions/vid_1_0", b"p"), ("/positions/vid_2_0", b"p")])
+    with pytest.raises(ValueError):
+        AtomicGroupUpdate(store).apply([])
+
+
+def test_atomic_update_rolls_back_on_midbatch_failure():
+    """A put that dies mid-batch must not leave a partial group visible:
+    the staged snapshot restores every pre-batch record (all-or-nothing,
+    not first-half-committed)."""
+    store = CascadeStore([f"n{i}" for i in range(2)])
+    store.create_object_pool("/positions", store.nodes, 2,
+                             affinity_set_regex=r"/[a-z0-9]+_[0-9]+_")
+    store.put("/positions/vid_1_0", b"old")
+    calls = {"n": 0}
+    orig = store.put
+
+    def flaky(key, value, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("injected put failure")
+        return orig(key, value, **kw)
+
+    store.put = flaky
+    try:
+        with pytest.raises(RuntimeError):
+            AtomicGroupUpdate(store).apply([
+                ("/positions/vid_1_0", b"new"),
+                ("/positions/vid_1_1", b"new")])
+    finally:
+        store.put = orig
+    home = store.shard_of("/positions/vid_1_0")
+    assert home.objects["/positions/vid_1_0"].value == b"old"
+    assert "/positions/vid_1_1" not in home.objects
+
+
+def test_atomic_move_group_all_or_nothing():
+    """Gang-repair commit: a group's records relocate in one validated
+    commit; mixed-label or cross-shard batches are rejected before any
+    mutation."""
+    store = CascadeStore([f"n{i}" for i in range(4)])
+    store.create_object_pool("/positions", store.nodes, 2,
+                             affinity_set_regex=r"/[a-z0-9]+_[0-9]+_")
+    pool = store.pools["/positions"]
+    for f in range(4):
+        store.put(f"/positions/vid_1_{f}", b"p")
+    home = pool.home("/positions/vid_1_0")
+    src = next(s for s in pool.shards.values() if s.name != home.name)
+    # strand the group on the wrong shard, then commit it home atomically
+    for f in range(4):
+        k = f"/positions/vid_1_{f}"
+        src.objects[k] = home.objects.pop(k)
+    moves = [(src, k, src.objects[k])
+             for k in sorted(src.objects)]
+    n = AtomicGroupUpdate(store).move_group(pool, "/vid_1_", moves)
+    assert n == 4
+    assert all(f"/positions/vid_1_{f}" in home.objects for f in range(4))
+    assert not any(k.startswith("/positions/vid_1_")
+                   for k in src.objects)
+    with pytest.raises(ValueError):
+        AtomicGroupUpdate(store).move_group(pool, "/vid_1_", [])
+    store.put("/positions/vid_2_0", b"q")
+    bad = [(home, "/positions/vid_1_0",
+            home.objects["/positions/vid_1_0"]),
+           (home, "/positions/vid_2_0",
+            store.shard_of("/positions/vid_2_0").objects[
+                "/positions/vid_2_0"])]
+    with pytest.raises(ValueError):
+        AtomicGroupUpdate(store).move_group(pool, "/vid_1_", bad)
+
+
+def test_sequencer_memory_is_bounded_by_in_flight_labels():
+    """A sequencer that has processed many distinct groups retains state
+    only for groups with work currently in flight — drained labels are
+    pruned, so long-horizon runs don't accrete one queue per label."""
+    seq = GroupSequencer()
+    for i in range(10_000):
+        lbl = f"g{i}"
+        seq.admit(lbl, i)
+        assert seq.ready(lbl) == i
+        seq.complete(lbl)
+    assert seq.n_labels() == 0
+    assert not seq._queues and not seq._busy
+    # the executor's retire pattern — ready() after complete() on a
+    # drained label — must stay a cheap no-op on pruned labels
+    assert seq.ready("g0") is None
+    assert seq.pending("g123") == 0
+    # only in-flight labels hold state
+    seq.admit("a", 1)
+    seq.admit("a", 2)
+    assert seq.ready("a") == 1
+    seq.admit("b", 3)
+    assert seq.n_labels() == 2
+    seq.complete("a")
+    assert seq.ready("a") == 2
+    seq.complete("a")
+    assert seq.ready("b") == 3
+    seq.complete("b")
+    assert seq.n_labels() == 0
 
 
 def test_prefetch_plan_covers_group():

@@ -6,9 +6,9 @@ import random
 
 import pytest
 
-from repro.core import CascadeStore
-from repro.runtime import (Compute, FaultInjector, Node, Runtime,
-                           set_straggler)
+from repro.core import CascadeStore, workflow_key
+from repro.runtime import (Compute, FaultInjector, Node, RetryPolicy,
+                           Runtime, set_straggler)
 from repro.runtime.scheduler import hedge_candidates
 from repro.workflows import (BatchPolicy, Emit, WorkflowGraph,
                              WorkflowRuntime, mode_kwargs)
@@ -119,6 +119,68 @@ def test_requeue_compute_transfers_pending_and_reprices():
     assert n1.pending["gpu"] == pytest.approx(0.0)
 
 
+# -- bounded retry probes on stalled entries ----------------------------------
+
+def test_retry_probe_fails_over_when_a_replica_recovers_early():
+    """A stalled entry armed with a RetryPolicy re-dispatches on the
+    first backoff probe that finds a recovered shard member — instead of
+    sleeping out the dead node's full outage."""
+    rt, _ = _bare(n=3, shards=1, replication=3)
+    inj = FaultInjector(rt, retry=RetryPolicy(max_attempts=4, backoff=0.1))
+    # every replica is down when n0 dies, so its queue must stall ...
+    inj.fail_node("n1", at=0.0, duration=0.12)   # ... but n1 is back early
+    inj.fail_node("n2", at=0.0, duration=100.0)
+    done = {}
+    for tag in ("j0", "j1"):
+        _compute_job(rt, "n0", 0.1, done, tag)
+    ev = inj.fail_node("n0", at=0.05, duration=10.0)
+    rt.run(until=20.0)
+    assert ev.stalled == 1                       # j1 had nowhere to go
+    assert done["j0"] == pytest.approx(0.1)      # in service: drains
+    # probe at t_down + backoff_of(1) = 0.15 finds n1 up and moves j1
+    assert done["j1"] == pytest.approx(0.25)
+    assert ev.retries == 1 and ev.retry_failovers == 1
+    assert ev.retries_exhausted == 0
+    assert ev.retries <= ev.stalled * (4 - 1)    # budget invariant
+
+
+def test_retry_budget_exhaustion_degrades_to_stall_until_recovery():
+    """max_attempts (or timeout) exhausted: the entry stays put and the
+    recovery kick still completes it — liveness is never lost."""
+    rt, _ = _bare(n=3, shards=1, replication=3)
+    pol = RetryPolicy(max_attempts=4, backoff=0.1, multiplier=2.0)
+    inj = FaultInjector(rt, retry=pol)
+    inj.fail_node("n1", at=0.0, duration=100.0)
+    inj.fail_node("n2", at=0.0, duration=100.0)
+    done = {}
+    for tag in ("j0", "j1"):
+        _compute_job(rt, "n0", 0.1, done, tag)
+    ev = inj.fail_node("n0", at=0.05, duration=1.0)
+    rt.run(until=50.0)
+    # probes at 0.15 / 0.35 / 0.75 all find nobody; attempt 4 is the last
+    assert ev.retries == 3 and ev.retries_exhausted == 1
+    assert ev.retry_failovers == 0
+    assert ev.retries <= ev.stalled * (pol.max_attempts - 1)
+    assert done["j1"] == pytest.approx(1.15)     # n0 up at 1.05 + 0.1
+
+
+def test_retry_timeout_gives_up_before_max_attempts():
+    rt, _ = _bare(n=3, shards=1, replication=3)
+    inj = FaultInjector(rt, retry=RetryPolicy(max_attempts=8, backoff=0.1,
+                                              timeout=0.15))
+    inj.fail_node("n1", at=0.0, duration=100.0)
+    inj.fail_node("n2", at=0.0, duration=100.0)
+    done = {}
+    for tag in ("j0", "j1"):
+        _compute_job(rt, "n0", 0.1, done, tag)
+    ev = inj.fail_node("n0", at=0.05, duration=1.0)
+    rt.run(until=50.0)
+    # probe at 0.15 is within budget; the next would land at 0.35, past
+    # t_down + timeout = 0.2 — deadline-aware give-up
+    assert ev.retries == 1 and ev.retries_exhausted == 1
+    assert done["j1"] == pytest.approx(1.15)
+
+
 # -- workflow-atomic gang repair ----------------------------------------------
 
 def _wgraph(fast=2, cost=0.01):
@@ -194,6 +256,83 @@ def test_fault_aware_admission_avoids_dead_slots():
                for sh in anchor.pins.values())
     assert max(r.t_complete
                for r in wrt.tracker.records.values()) < 1.0
+
+
+# -- exactly-once ordered replay ----------------------------------------------
+
+def _chain_graph(fast=2, cost=0.005):
+    g = WorkflowGraph("chain")
+    g.add_tier("fast", fast, RES)
+    g.add_pool("/in", tier="fast", shards=fast)
+    g.add_pool("/mid", tier="fast", shards=fast)
+    g.add_pool("/out", tier="fast", shards=fast)
+    g.add_stage("first", pool="/in", resource="gpu", cost=cost,
+                emits=[Emit("/mid", fanout=1, size=1024)])
+    g.add_stage("second", pool="/mid", resource="gpu", cost=cost,
+                emits=[Emit("/out", fanout=1, size=1024)], sink=True)
+    return g.validate()
+
+
+def test_exactly_once_dedupes_replayed_triggers():
+    """A re-delivered trigger key (client retry, failover replay) is
+    dropped on its idempotence key: stage fired/done counters stay exact
+    and the duplicate is counted, not executed."""
+    wrt = WorkflowRuntime(_wgraph(), exactly_once=True,
+                          **mode_kwargs("atomic"))
+    for i in range(10):
+        wrt.submit(f"i{i}", at=0.001 + i * 0.005, size=2048)
+    for i in (2, 5):     # duplicated deliveries mid-run
+        key = workflow_key(wrt.graph.source_pool, f"i{i}", "event", 0)
+        wrt.rt.client_put(0.03 + i * 0.001, key, None, size=2048)
+    wrt.run()
+    s = wrt.summary()
+    assert s["n"] == 10
+    assert s["dup_triggers_dropped"] == 2
+    for inst, rec in wrt.tracker.records.items():
+        assert rec.arrivals["work"] == 1, inst
+        assert rec.fired["work"] == 1 and rec.done["work"] == 1, inst
+    assert wrt.sequencer.n_labels() == 0         # fully drained
+
+
+def test_exactly_once_serializes_stages_per_group_in_order():
+    """The sequencer gate admits one stage body per instance label at a
+    time, in admission order — replays and parallel deliveries cannot
+    reorder one group's effects; distinct groups stay concurrent."""
+    wrt = WorkflowRuntime(_chain_graph(), exactly_once=True,
+                          **mode_kwargs("atomic"))
+    order = []
+    wrt.on_sequenced = (
+        lambda lbl, stage, key, t: order.append((lbl, stage)))
+    for i in range(8):
+        wrt.submit(f"i{i}", at=0.001 + i * 0.003)
+    wrt.run()
+    assert wrt.summary()["n"] == 8
+    per_label = {}
+    for lbl, stage in order:
+        per_label.setdefault(lbl, []).append(stage)
+    assert len(per_label) == 8
+    for lbl, stages in per_label.items():
+        assert stages == ["first", "second"], lbl   # per-group FIFO
+    assert wrt.sequencer.n_labels() == 0
+    assert wrt.sequencer.max_queue_len >= 1
+
+
+def test_exactly_once_gate_is_latency_transparent_when_uncontended():
+    """Without replays or faults a group's stages are already causally
+    ordered, so every gate resolves before its WaitFor parks — turning
+    exactly_once on reproduces the default run's completion times."""
+    def drive(exactly_once):
+        wrt = WorkflowRuntime(_chain_graph(),
+                              exactly_once=exactly_once,
+                              **mode_kwargs("atomic"))
+        for i in range(12):
+            wrt.submit(f"i{i}", at=0.001 + i * 0.002)
+        wrt.run()
+        return wrt
+
+    base, gated = drive(False), drive(True)
+    for inst, a in base.tracker.records.items():
+        assert gated.tracker.records[inst].t_complete == a.t_complete
 
 
 # -- hedged execution x StageBatcher ------------------------------------------
@@ -308,16 +447,41 @@ def _chaos_trial(rng):
     mode = rng.choice(["atomic", "atomic+batch", "atomic+abatch"])
     hedge = rng.choice([None, 0.02]) if mode != "atomic" else None
     admission = rng.choice([None, "reject"])
+    exactly_once = rng.choice([False, True])
+    retry = rng.choice([None, RetryPolicy(
+        max_attempts=rng.randint(2, 4), backoff=0.01,
+        timeout=rng.choice([None, 0.2]))])
     n_inst = rng.randint(10, 30)
     rate = rng.uniform(100.0, 400.0)
 
     graph = WORKFLOW_SHAPES[shape](shards=shards)
     wrt = WorkflowRuntime(graph, read_replicas=replicas,
                           hedge_after=hedge, admission=admission,
+                          exactly_once=exactly_once,
                           **mode_kwargs(mode))
     if shape == "rag":
         preload_index(wrt)
-    inj = wrt.enable_faults()
+    inj = wrt.enable_faults(retry=retry)
+    if exactly_once:
+        # instrument the gate: at most one body per label at a time — the
+        # mutual exclusion the per-group FIFO guarantee rests on
+        active = set()
+        orig_ready = wrt.sequencer.ready
+        orig_complete = wrt.sequencer.complete
+
+        def seq_ready(lbl):
+            item = orig_ready(lbl)
+            if item is not None:
+                assert lbl not in active, lbl
+                active.add(lbl)
+            return item
+
+        def seq_complete(lbl):
+            active.discard(lbl)
+            orig_complete(lbl)
+
+        wrt.sequencer.ready = seq_ready
+        wrt.sequencer.complete = seq_complete
     horizon = n_inst / rate
     tier_nodes = graph.tiers[shape].nodes
     for _ in range(rng.randint(1, 3)):
@@ -327,6 +491,15 @@ def _chaos_trial(rng):
     deadline = 1.0 if admission else None
     for i in range(n_inst):
         wrt.submit(f"i{i}", at=0.001 + i / rate, deadline=deadline)
+    n_dups = 0
+    if exactly_once and admission is None:
+        # duplicated trigger deliveries (client retries / replays): the
+        # idempotence key must absorb every one of them
+        for i in rng.sample(range(n_inst), k=min(3, n_inst)):
+            key = workflow_key(graph.source_pool, f"i{i}", "event", 0)
+            wrt.rt.client_put(0.001 + i / rate + rng.uniform(1e-4, horizon),
+                              key, None, size=0)
+            n_dups += 1
     wrt.run()
 
     # admitted = completed + rejected, and nothing lost
@@ -350,6 +523,19 @@ def _chaos_trial(rng):
     for node in wrt.rt.nodes.values():
         for r in ("gpu", "cpu"):
             assert node.pending[r] == pytest.approx(0.0, abs=1e-9)
+    # retry probes stayed inside the budget on every event
+    if retry is not None:
+        for ev in inj.events:
+            assert ev.retries <= ev.stalled * (retry.max_attempts - 1)
+            assert ev.retry_failovers + ev.retries_exhausted <= ev.stalled
+    # every duplicated delivery was absorbed, none executed (the fired /
+    # done exactness above already proves no duplicate completions), and
+    # the sequencer drained back to its bounded-empty state
+    if exactly_once:
+        if n_dups:
+            assert wrt.dup_triggers_dropped >= n_dups
+        assert wrt.sequencer.n_labels() == 0
+        assert not active
 
 
 try:

@@ -1,0 +1,159 @@
+"""Serving-plane recovery correctness (paper §7.2 under chaos): row
+failover with KV-priced session recovery, bounded turn retries, graceful
+shed, and exactly-once commit accounting."""
+import jax
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.runtime import FaultInjector, RetryPolicy
+from repro.serving import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = configs.get_smoke("granite-3-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, svc=None, checkpoint_every=None,
+            retry=None, n_rows=3):
+    eng = ServingEngine(model, params, n_rows=n_rows, max_slots=8,
+                        max_seq=128, policy="affinity",
+                        checkpoint_every=checkpoint_every)
+    if svc is not None:
+        eng._svc = dict(svc)     # pin calibration: identical virtual cost
+    if retry is not None:
+        eng.retry = retry
+    return eng
+
+
+def _drive(eng, kills=(), n_sessions=8, turns=6, gen=4):
+    """Chat turns spaced 2 decode-steps apart; kills are scheduled in
+    decode-step units so outages land mid-conversation regardless of the
+    host's calibrated step time."""
+    dt = eng._svc["decode_step"]
+    inj = FaultInjector(serving=eng)
+    events = [inj.fail_row(row, at=t0 * dt, duration=dur * dt)
+              for row, t0, dur in kills]
+    for i in range(n_sessions):
+        eng.open_session(f"s{i}")
+    t, outs = 0.0, {}
+    for _ in range(turns):
+        for i in range(n_sessions):
+            out, _ = eng.turn(f"s{i}", [1 + i, 2, 3], gen_tokens=gen,
+                              now=t)
+            outs.setdefault(f"s{i}", []).extend(out)
+            t += dt * 2.0
+    return outs, events
+
+
+KILLS = ((0, 40, 30), (1, 55, 30))       # two rows die mid-conversation
+
+
+def test_row_failover_recovers_every_session_exactly(model_and_params):
+    """Both recovery modes reproduce the healthy run's greedy outputs
+    token-for-token (zero lost sessions), commit every turn exactly once,
+    and the checkpointed engine's p99 is strictly below re-prefill's —
+    restoring a snapshot + replaying the suffix beats replaying the full
+    transcript."""
+    cfg, model, params = model_and_params
+    healthy = _engine(model, params)
+    svc = healthy._svc
+    ours, _ = _drive(healthy)
+
+    ck = _engine(model, params, svc=svc, checkpoint_every=2)
+    re = _engine(model, params, svc=svc, checkpoint_every=None)
+    outs_ck, ev_ck = _drive(ck, kills=KILLS)
+    outs_re, ev_re = _drive(re, kills=KILLS)
+
+    # recovery correctness: chaos is latency, never tokens
+    assert outs_ck == ours
+    assert outs_re == ours
+    for eng, evs in ((ck, ev_ck), (re, ev_re)):
+        s = eng.summary()
+        assert s["turns_ok"] == 8 * 6          # zero lost turns
+        assert s["shed_turns"] == 0
+        assert s["dup_effects"] == 0           # exactly-once commits
+        assert s["order_violations"] == 0      # per-group FIFO held
+        assert s["sessions_displaced"] > 0     # the outages really bit
+        assert s["groups_rerouted"] > 0
+        assert sum(e.sessions_displaced for e in evs) == \
+            s["sessions_displaced"]
+    # the engines chose the mode they were configured for
+    assert ck.summary()["recoveries_ckpt"] > 0
+    assert ck.summary()["recovery_bytes"] > 0
+    assert ck.summary()["checkpoint_bytes"] > 0
+    assert re.summary()["recoveries_reprefill"] > 0
+    assert re.summary()["recoveries_ckpt"] == 0
+    # KV-priced recovery: checkpoint restore + suffix replay is strictly
+    # cheaper at the tail than re-prefilling the whole transcript
+    assert ck.summary()["turn_p99"] < re.summary()["turn_p99"]
+
+
+def test_inflight_conflict_retries_within_budget(model_and_params):
+    """A turn whose row dies inside its service window fails at the death
+    instant, backs off, and succeeds on a surviving row — attempts stay
+    within the budget and the output still matches the healthy run."""
+    cfg, model, params = model_and_params
+    healthy = _engine(model, params)
+    svc = healthy._svc
+    dt = svc["decode_step"]
+    healthy.open_session("a")
+    h1, _ = healthy.turn("a", [5, 2, 3], gen_tokens=4, now=0.0)
+    h2, _ = healthy.turn("a", [7, 8], gen_tokens=32, now=10 * dt)
+
+    eng = _engine(model, params, svc=svc,
+                  retry=RetryPolicy(max_attempts=4, backoff=2 * dt))
+    inj = FaultInjector(serving=eng)
+    eng.open_session("a")
+    o1, m1 = eng.turn("a", [5, 2, 3], gen_tokens=4, now=0.0)
+    assert o1 == h1 and m1.attempts == 1
+    # kill the session's own row three steps into its decode window
+    ev = inj.fail_row(m1.row, at=13 * dt, duration=3 * dt)
+    o2, m2 = eng.turn("a", [7, 8], gen_tokens=32, now=10 * dt)
+    assert o2 == h2                           # retry re-ran it exactly
+    assert m2.attempts == 2
+    assert m2.attempts <= eng.retry.max_attempts
+    assert m2.retry_wait > 0.0
+    assert m2.recovered == "reprefill"        # state died with the row
+    assert ev.turns_failed == 1
+    assert ev.sessions_displaced == 1
+    assert eng.summary()["dup_effects"] == 0
+
+
+def test_exhausted_budget_sheds_turn_and_session_survives(model_and_params):
+    """Retry budget exhaustion sheds the turn (no commit, session state
+    untouched) instead of spinning; the session keeps working once a row
+    is back."""
+    cfg, model, params = model_and_params
+    healthy = _engine(model, params, n_rows=1)
+    svc = healthy._svc
+    dt = svc["decode_step"]
+    healthy.open_session("a")
+    h1, _ = healthy.turn("a", [5, 2, 3], gen_tokens=4, now=0.0)
+    h3, _ = healthy.turn("a", [9], gen_tokens=4, now=200 * dt)
+
+    # one row only: when it dies there is nowhere to fail over to
+    eng = _engine(model, params, svc=svc, n_rows=1,
+                  retry=RetryPolicy(max_attempts=2, backoff=2 * dt))
+    inj = FaultInjector(serving=eng)
+    eng.open_session("a")
+    o1, m1 = eng.turn("a", [5, 2, 3], gen_tokens=4, now=0.0)
+    assert o1 == h1
+    ev = inj.fail_row(0, at=12 * dt, duration=100 * dt)
+    turns_before = eng.sessions["a"].turns
+    o2, m2 = eng.turn("a", [7, 8], gen_tokens=32, now=10 * dt)
+    assert m2.shed and o2 == []
+    assert eng.sessions["a"].turns == turns_before   # nothing committed
+    assert eng.summary()["shed_turns"] == 1
+    assert ev.turns_failed >= 1
+    # after recovery the session still answers (recovering its state),
+    # and greedily matches a healthy session with the same committed
+    # history — the shed turn left no partial effects behind
+    o3, m3 = eng.turn("a", [9], gen_tokens=4, now=200 * dt)
+    assert not m3.shed and len(o3) == 4
+    assert o3 == h3
+    assert eng.summary()["dup_effects"] == 0
