@@ -106,6 +106,11 @@ SUITE_DELTA_METRICS = {
     "fig11": {**DELTA_METRICS, "lost": 0.0, "late_completions": 0.10},
     "fig12": {**DELTA_METRICS, "lost_sessions": 0.0, "dup_effects": 0.0,
               "shed_turns": 0.0, "order_violations": 0.0},
+    # fig13's correlated-failure counters are hard floors too: one lost
+    # instance under a zone kill or cut, or one duplicate effect past
+    # the split-brain fence, is a survival regression
+    "fig13": {**DELTA_METRICS, "lost_instances": 0.0, "dup_effects": 0.0,
+              "order_violations": 0.0, "fence_rejected": 0.0},
 }
 
 

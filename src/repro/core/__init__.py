@@ -10,7 +10,7 @@ from .object_store import (CascadeStore, GroupCounters, ObjectPool,
                            ObjectRecord, Shard, UDL)
 from .client import ServiceClientAPI, VOLATILE, PERSISTENT
 from .prefetch import PrefetchEngine, PrefetchPlan
-from .consistency import AtomicGroupUpdate, GroupSequencer
+from .consistency import AtomicGroupUpdate, EpochFence, GroupSequencer
 from .groups import GroupRegistry, MigrationPlan
 from .migration import GroupMigrator, MigrationRecord
 
@@ -25,7 +25,7 @@ __all__ = [
     "UDL",
     "ServiceClientAPI", "VOLATILE", "PERSISTENT",
     "PrefetchEngine", "PrefetchPlan",
-    "AtomicGroupUpdate", "GroupSequencer",
+    "AtomicGroupUpdate", "EpochFence", "GroupSequencer",
     "GroupRegistry", "MigrationPlan",
     "GroupMigrator", "MigrationRecord",
 ]

@@ -80,6 +80,47 @@ class GroupSequencer:
         return out
 
 
+class EpochFence:
+    """Per-label monotonic epochs: the split-brain guard for repair and
+    commit paths (Vortex-style lease fencing, localized per affinity
+    group).
+
+    Every authoritative action on a label — re-pinning its gang, claiming
+    the right to drive its commits — first ``advance``s the label's epoch
+    and carries the token it got back.  Any actor still holding an older
+    token (a partitioned minority that observed the same failure, a
+    repair scheduled before a later one superseded it) fails ``check``
+    and must drop its action: a double-pin or double-commit becomes a
+    counted rejection instead of divergent state.  Fault-free runs never
+    advance past epoch 1 per label, and an unknown label always passes
+    ``check`` at token 0, so the healthy path costs one dict lookup.
+    """
+
+    def __init__(self):
+        self._epochs: Dict[str, int] = {}
+        self.rejected = 0          # stale-token actions fenced off
+
+    def current(self, label: str) -> int:
+        return self._epochs.get(label, 0)
+
+    def advance(self, label: str) -> int:
+        e = self._epochs.get(label, 0) + 1
+        self._epochs[label] = e
+        return e
+
+    def check(self, label: str, epoch: int) -> bool:
+        """True iff ``epoch`` is still the label's newest token.  A stale
+        token is counted in ``rejected`` — the caller must abandon the
+        fenced action, not retry it with the same token."""
+        if epoch == self._epochs.get(label, 0):
+            return True
+        self.rejected += 1
+        return False
+
+    def n_labels(self) -> int:
+        return len(self._epochs)
+
+
 class AtomicGroupUpdate:
     """All-or-nothing multi-put of objects sharing one affinity key.
 

@@ -49,6 +49,7 @@ class StoreStats:
     bytes_replica_sync: int = 0
     migrations: int = 0           # group relocations (GroupMigrator)
     bytes_migrated: int = 0
+    partition_blocked: int = 0    # reads with no reachable replica
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -170,6 +171,13 @@ class CascadeStore:
         # prefixes nest, in which case the memo is disabled (see pool_for)
         self._pool_memo: Dict[str, ObjectPool] = {}
         self._nested_prefixes = False
+        # active network partition (node -> group id, unlisted = group 0)
+        # mirrored from the simulator by FaultInjector.partition; None
+        # keeps the read path to a single predicate check.
+        self.partition: Optional[Dict[str, int]] = None
+        # one-shot flag: the last get returned None because the record
+        # exists but every replica holding it is across the partition
+        self.last_get_blocked = False
 
     # -- pool management (paper Listing 1) -----------------------------------
 
@@ -283,6 +291,26 @@ class CascadeStore:
         """
         pool = self.pool_for(key)
         homes = pool.replica_homes(key)
+        p = self.partition
+        if p is not None:
+            # reachability filter: a replica only serves readers on its
+            # side of the cut, so a reachable (possibly non-home) replica
+            # beats an unreachable home.  A record whose every holder is
+            # across the cut blocks (flagged for the simulator to park
+            # the read) instead of being invented missing.
+            self.last_get_blocked = False
+            rg = p.get(node, 0) if node is not None else 0
+            reach = [h for h in homes
+                     if any(p.get(m, 0) == rg for m in h.nodes)]
+            if len(reach) < len(homes):
+                if not any(key in h.objects for h in reach) and \
+                        any(key in h.objects for h in homes):
+                    self.last_get_blocked = True
+                    self.stats.partition_blocked += 1
+                    self.stats.gets += 1
+                    return None, False
+                if reach:
+                    homes = reach
         shard, rec = homes[0], None
         for h in homes:
             r = h.objects.get(key)

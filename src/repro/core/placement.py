@@ -155,6 +155,10 @@ class ReplicatedPlacement(PlacementPolicy):
         assert n_replicas >= 1, n_replicas
         self.inner = inner or HashPlacement()
         self.n_replicas = n_replicas
+        # shard -> failure-domain label (set_domain); empty = topology
+        # blind, which keeps replica_shards byte-identical to the
+        # pre-domain rendezvous ranking
+        self.domains: Dict[str, str] = {}
 
     def place(self, label: str, shards: Sequence[str]) -> str:
         return self.inner.place(label, shards)
@@ -164,7 +168,33 @@ class ReplicatedPlacement(PlacementPolicy):
         ranked = sorted((s for s in shards if s != primary),
                         key=lambda s: stable_hash(f"{label}::{s}"),
                         reverse=True)
-        return [primary] + ranked[:self.n_replicas - 1]
+        if not self.domains:
+            return [primary] + ranked[:self.n_replicas - 1]
+        # anti-affinity spreading: walk the rendezvous ranking but defer
+        # shards whose failure domain is already represented, so replicas
+        # land in distinct domains whenever enough domains exist; the
+        # deferred shards fill any remaining slots in rank order.
+        homes = [primary]
+        used = {self.domains.get(primary, "")}
+        deferred = []
+        for s in ranked:
+            d = self.domains.get(s, "")
+            if d and d in used:
+                deferred.append(s)
+            else:
+                homes.append(s)
+                used.add(d)
+        homes.extend(deferred)
+        return homes[:self.n_replicas]
+
+    def set_domain(self, shard: str, domain: str) -> None:
+        if domain:
+            self.domains[shard] = domain
+        else:
+            self.domains.pop(shard, None)
+        sd = getattr(self.inner, "set_domain", None)
+        if sd is not None:
+            sd(shard, domain)
 
     def record_load(self, shard: str, nbytes: int) -> None:
         rec = getattr(self.inner, "record_load", None)
@@ -223,6 +253,9 @@ class PlacementEngine:
         # the shard set changes (autoscaler resharding assigns .shards).
         self._home_cache: Dict[str, str] = {}
         self._replica_cache: Dict[str, List[str]] = {}
+        # shard -> failure-domain label (see set_domain); empty until a
+        # topology-aware caller threads one through
+        self.shard_domains: Dict[str, str] = {}
 
     @property
     def shards(self) -> List[str]:
@@ -283,6 +316,17 @@ class PlacementEngine:
         sc = getattr(self.policy, "set_capacity", None)
         if sc is not None:
             sc(shard, weight)
+
+    def set_domain(self, shard: str, domain: str) -> None:
+        """Failure-domain (rack/zone) label for a shard.  Kept on the
+        engine for repair-time topology queries and threaded to policies
+        that spread over domains (``ReplicatedPlacement``); domain-blind
+        policies ignore it."""
+        self.shard_domains[shard] = domain
+        sd = getattr(self.policy, "set_domain", None)
+        if sd is not None:
+            sd(shard, domain)
+            self._replica_cache.clear()
 
     def pin(self, label: str, shard: str, nbytes: int = 0) -> None:
         """Override a group's home (installed by GroupMigrator)."""

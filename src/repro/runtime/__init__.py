@@ -6,7 +6,7 @@ from .batching import BatchCostModel
 from .stats import P2Quantile, StageStats
 from .scheduler import (LeastLoadedScheduler, RandomScheduler,
                         ReplicaScheduler, Scheduler, ShardLocalScheduler,
-                        node_load)
+                        dispatchable, node_load)
 from .executor import Runtime, TaskContext
 from .faults import (AvailabilityReport, FailureEvent, FaultInjector,
                      RetryPolicy, set_straggler)
@@ -23,7 +23,7 @@ __all__ = [
     "BatchCostModel",
     "P2Quantile", "StageStats",
     "LeastLoadedScheduler", "RandomScheduler", "ReplicaScheduler",
-    "Scheduler", "ShardLocalScheduler", "node_load",
+    "Scheduler", "ShardLocalScheduler", "dispatchable", "node_load",
     "Runtime", "TaskContext",
     "AvailabilityReport", "FailureEvent", "FaultInjector", "RetryPolicy",
     "set_straggler",

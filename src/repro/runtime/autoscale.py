@@ -71,7 +71,9 @@ class AutoscalePolicy:
 
 
 def replace_gang_pins(store, pools: Sequence[str], labels: Sequence[str],
-                      survivors: Sequence[str]) -> Dict[str, int]:
+                      survivors: Sequence[str],
+                      fence=None, epochs: Optional[Dict[str, int]] = None,
+                      avoid_domain: str = "") -> Dict[str, int]:
     """Re-pin ``labels`` to one surviving slot each, in every lockstep pool.
 
     The workflow-atomic move shared by slot retirement (scale-in) and node
@@ -81,13 +83,28 @@ def replace_gang_pins(store, pools: Sequence[str], labels: Sequence[str],
     Existing pins on the labels are dropped first; object migration is the
     caller's business (the scaler's re-home pass, the fault path's
     stranded-object move).  Returns label -> destination slot index.
+
+    ``fence``/``epochs`` (a ``repro.core.EpochFence`` plus the per-label
+    tokens the caller advanced when it claimed the repair) make the move
+    split-brain safe: a label whose token went stale between claim and
+    commit is skipped — some fresher repair owns it now — instead of
+    double-pinned.  ``avoid_domain`` biases the destination away from the
+    failure domain that just died: survivors with any member in it rank
+    last, so a repaired gang does not land back in the blast radius.
     """
     anchor = store.pools[pools[0]].engine
-    for lbl in labels:
-        anchor.unpin(lbl)
     placed: Dict[str, int] = {}
     survivors = list(survivors)
+    if avoid_domain and len(survivors) > 1:
+        doms = getattr(anchor, "shard_domains", {})
+        safe = [s for s in survivors if doms.get(s, "") != avoid_domain]
+        if safe:
+            survivors = safe
     for lbl in labels:
+        if fence is not None and \
+                not fence.check(lbl, (epochs or {}).get(lbl, 0)):
+            continue                     # a fresher repair owns this gang
+        anchor.unpin(lbl)
         dst = anchor.policy.place(lbl, survivors)
         idx = anchor.shards.index(dst)
         for prefix in pools:

@@ -112,6 +112,27 @@ class Runtime:
                 key: str, value: Any) -> None:
         node = self.scheduler.pick(shard, key, self.nodes,
                                    binding.pool_nodes)
+        p = self.sim.partition
+        if p is not None and p.get(node, 0) != 0:
+            # every lane able to run this task sits across the cut:
+            # dispatch is client-observable (majority-side), so hold the
+            # launch until heal instead of starting work whose effects
+            # the client could not see.  The node is re-picked at heal;
+            # a sequencer label stays held, preserving order across the
+            # cut.  The wait is blamed as a partition_stall span.
+            self.sim.partition_parked_dispatches += 1
+            t_park = self.sim.now
+
+            def relaunch():
+                tr = self.trace_of(key) if self.trace_of is not None \
+                    else None
+                if tr is not None and self.sim.tracer is not None:
+                    self.sim.tracer.span(tr, "partition_stall",
+                                         f"dispatch:{key}", t_park,
+                                         self.sim.now)
+                self._launch(label, binding, shard, key, value)
+            self.sim._partition_parked_calls.append(relaunch)
+            return
         ctx = TaskContext(runtime=self, node=node, key=key, shard=shard.name)
         gen = binding.make_task(ctx, key, value)
         t0 = self.sim.now

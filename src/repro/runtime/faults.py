@@ -35,7 +35,7 @@ the schedule and the unified :class:`FailureEvent` record.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from .executor import Runtime
 from .simulation import _ComputeStart
@@ -77,10 +77,19 @@ class FailureEvent:
     counters (``turns_failed``, ``sessions_displaced``,
     ``groups_rerouted``) are filled by the engine when the event targets a
     serving row instead of a DES node.
+
+    ``kind`` records the triggering fault: ``"node"`` (independent kill),
+    ``"domain"`` (correlated zone kill — one event per member node, all
+    carrying the zone in ``domain``), ``"partition"`` (network split; the
+    synthetic ``node`` names the minority group), or ``"row"`` (serving
+    row).  ``domain`` is the failure-domain label of the affected node
+    when it has one.
     """
     node: str
     t_down: float
     t_up: float
+    kind: str = "node"
+    domain: str = ""
     failed_over: int = 0
     stalled: int = 0
     retries: int = 0
@@ -93,13 +102,21 @@ class FailureEvent:
 
 @dataclasses.dataclass
 class AvailabilityReport:
-    """Aggregate over every ``FailureEvent`` an injector has fired."""
+    """Aggregate over every ``FailureEvent`` an injector has fired.
+
+    ``domain_downtime`` sums node-outage seconds per failure-domain label
+    (only nodes carrying a label appear); ``partition_time`` sums the
+    wall-clock of every network split scheduled on the injector.
+    """
     downtime: float
     tasks_failed_over: int
     tasks_stalled: int
     tasks_retried: int = 0
     turns_failed: int = 0
     sessions_displaced: int = 0
+    domain_downtime: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    partition_time: float = 0.0
 
 
 class FaultInjector:
@@ -120,15 +137,65 @@ class FaultInjector:
         self.events: List[FailureEvent] = []
         self.on_down: List[Callable[[FailureEvent], None]] = []
         self.on_up: List[Callable[[FailureEvent], None]] = []
+        # network-split listeners: fn(event) at cut time / heal time
+        self.on_partition: List[Callable[[FailureEvent], None]] = []
+        self.on_heal: List[Callable[[FailureEvent], None]] = []
+        self._active_partition: Optional[Dict[str, int]] = None
 
     def fail_node(self, node: str, at: float, duration: float) -> FailureEvent:
         assert self.rt is not None, "fail_node needs a DES runtime"
         if node not in self.rt.nodes:
             raise KeyError(f"unknown node {node!r}")
-        ev = FailureEvent(node=node, t_down=at, t_up=at + duration)
+        ev = FailureEvent(node=node, t_down=at, t_up=at + duration,
+                          domain=self.rt.nodes[node].domain)
         self.events.append(ev)
         self.rt.sim.at(at, self._down, ev)
         self.rt.sim.at(ev.t_up, self._up, ev)
+        return ev
+
+    def fail_domain(self, domain: str, at: float,
+                    duration: float) -> List[FailureEvent]:
+        """Correlated outage: kill every node labeled ``domain`` at the
+        same instant (rack/zone loss).  One :class:`FailureEvent` per
+        member, all stamped ``kind="domain"``, so per-node failover
+        accounting stays exact while the report can aggregate the zone."""
+        assert self.rt is not None, "fail_domain needs a DES runtime"
+        members = sorted(n for n, nd in self.rt.nodes.items()
+                         if nd.domain == domain)
+        if not members:
+            raise KeyError(f"no nodes in domain {domain!r}")
+        evs = []
+        for n in members:
+            ev = FailureEvent(node=n, t_down=at, t_up=at + duration,
+                              kind="domain", domain=domain)
+            self.events.append(ev)
+            self.rt.sim.at(at, self._down, ev)
+            self.rt.sim.at(ev.t_up, self._up, ev)
+            evs.append(ev)
+        return evs
+
+    def partition(self, groups: Sequence[Sequence[str]], at: float,
+                  duration: float) -> FailureEvent:
+        """Schedule a network split: nodes in different ``groups`` entries
+        cannot reach each other for ``duration`` seconds (nodes in no
+        entry form the implicit majority, group 0).  Nodes stay *up* —
+        "up" no longer implies "reachable": replica reads, failover,
+        hedging, and repair all route through ``Simulator.reachable``
+        while the split is active.  Heal re-drives every read the cut
+        parked.  One split at a time (a second cut replaces the first)."""
+        assert self.rt is not None, "partition needs a DES runtime"
+        pmap: Dict[str, int] = {}
+        for gid, members in enumerate(groups):
+            for n in members:
+                if n not in self.rt.nodes:
+                    raise KeyError(f"unknown node {n!r}")
+                pmap[n] = gid
+        minority = sorted(n for n, g in pmap.items() if g != 0)
+        ev = FailureEvent(node="cut(" + ",".join(minority) + ")",
+                          t_down=at, t_up=at + duration, kind="partition")
+        self.events.append(ev)
+        self.rt.sim.at(at, self._partition_start, (ev, pmap))
+        self.rt.sim.at(ev.t_up, self._partition_heal, (ev, pmap))
         return ev
 
     def fail_row(self, row: int, at: float, duration: float) -> FailureEvent:
@@ -141,14 +208,23 @@ class FaultInjector:
         return ev
 
     def report(self) -> AvailabilityReport:
+        outages = [ev for ev in self.events if ev.kind != "partition"]
+        per_domain: Dict[str, float] = {}
+        for ev in outages:
+            if ev.domain:
+                per_domain[ev.domain] = per_domain.get(ev.domain, 0.0) \
+                    + (ev.t_up - ev.t_down)
         return AvailabilityReport(
-            downtime=sum(ev.t_up - ev.t_down for ev in self.events),
+            downtime=sum(ev.t_up - ev.t_down for ev in outages),
             tasks_failed_over=sum(ev.failed_over for ev in self.events),
             tasks_stalled=sum(ev.stalled for ev in self.events),
             tasks_retried=sum(ev.retries for ev in self.events),
             turns_failed=sum(ev.turns_failed for ev in self.events),
             sessions_displaced=sum(ev.sessions_displaced
-                                   for ev in self.events))
+                                   for ev in self.events),
+            domain_downtime=per_domain,
+            partition_time=sum(ev.t_up - ev.t_down for ev in self.events
+                               if ev.kind == "partition"))
 
     # -- event bodies -------------------------------------------------------
 
@@ -230,13 +306,38 @@ class FaultInjector:
         for fn in self.on_up:
             fn(ev)
 
+    # -- partition bodies ---------------------------------------------------
+
+    def _partition_start(self, arg) -> None:
+        ev, pmap = arg
+        sim = self.rt.sim
+        sim.partition = pmap
+        sim.store.partition = pmap
+        self._active_partition = pmap
+        for fn in self.on_partition:
+            fn(ev)
+
+    def _partition_heal(self, arg) -> None:
+        ev, pmap = arg
+        if self._active_partition is not pmap:
+            return                       # a later cut replaced this one
+        self._active_partition = None
+        self.rt.sim.heal_partition()
+        for fn in self.on_heal:
+            fn(ev)
+
     def _failover_target(self, failed: str) -> Optional[str]:
-        # a surviving up member of any shard containing the failed node
+        # a surviving up member of any shard containing the failed node —
+        # and, under a partition, one on the failed node's side of the
+        # cut: its queue entries are only observable from there, so a
+        # minority-side death cannot fail work over across the split
+        sim = self.rt.sim
         for pool in self.rt.store.pools.values():
             for shard in pool.shards.values():
                 if failed in shard.nodes:
                     for n in shard.nodes:
-                        if n != failed and self.rt.nodes[n].up:
+                        if n != failed and self.rt.nodes[n].up and \
+                                sim.reachable(failed, n):
                             return n
         return None
 

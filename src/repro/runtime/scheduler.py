@@ -64,15 +64,28 @@ def _least_loaded_on(candidates: Sequence[str], nodes: Dict[str, Node],
     return min(candidates, key=lambda n: node_load(nodes[n], resource))
 
 
+def dispatchable(store: CascadeStore, name: str, nodes: Dict[str, Node]
+                 ) -> bool:
+    """Up AND reachable from the dispatcher.  Dispatch is client-driven,
+    and the client sits on the majority side of any active partition
+    (group 0), so "node up" alone is not "node usable": a minority-side
+    node is alive but cannot be handed work or serve replica reads until
+    the cut heals.  Without a partition this is exactly ``Node.up``."""
+    if not nodes[name].up:
+        return False
+    p = store.partition
+    return p is None or p.get(name, 0) == 0
+
+
 def hedge_candidates(store: CascadeStore, shard: Shard, key: str,
                      nodes: Dict[str, Node],
                      exclude: Sequence[str] = ()) -> List[str]:
-    """Up nodes a hedged duplicate of work homed at ``(shard, key)`` may
-    run on: the key's replica shards' members (replication >= 2 is what
-    makes the duplicate's reads local) plus the home shard's own members,
-    minus ``exclude`` (the primary lane's node).  Sorted for determinism;
-    empty means the slot has no live alternative and the caller skips the
-    hedge."""
+    """Up, reachable nodes a hedged duplicate of work homed at
+    ``(shard, key)`` may run on: the key's replica shards' members
+    (replication >= 2 is what makes the duplicate's reads local) plus the
+    home shard's own members, minus ``exclude`` (the primary lane's
+    node).  Sorted for determinism; empty means the slot has no live
+    alternative and the caller skips the hedge."""
     try:
         homes = store.pool_for(key).replica_homes(key)
     except KeyError:
@@ -80,7 +93,7 @@ def hedge_candidates(store: CascadeStore, shard: Shard, key: str,
     cand = {n for h in homes for n in h.nodes}
     cand.update(shard.nodes)
     cand.difference_update(exclude)
-    return [n for n in sorted(cand) if nodes[n].up]
+    return [n for n in sorted(cand) if dispatchable(store, n, nodes)]
 
 
 class ShardLocalScheduler(Scheduler):
@@ -126,7 +139,11 @@ class ReplicaScheduler(Scheduler):
             homes = self.store.pool_for(key).replica_homes(key)
         except KeyError:
             homes = [shard]
-        cand = [n for h in homes for n in h.nodes if nodes[n].up]
+        # up AND reachable: under a partition a reachable replica member
+        # beats the unreachable home shard (the home being "up" across
+        # the cut serves nothing this side of it)
+        cand = [n for h in homes for n in h.nodes
+                if dispatchable(self.store, n, nodes)]
         if not cand:
             cand = list(shard.nodes)
 
@@ -145,7 +162,8 @@ class ReplicaScheduler(Scheduler):
             homes = self.store.pool_for(keys[0]).replica_homes(keys[0])
         except KeyError:
             homes = [shard]
-        cand = [n for h in homes for n in h.nodes if nodes[n].up]
+        cand = [n for h in homes for n in h.nodes
+                if dispatchable(self.store, n, nodes)]
         return _least_loaded_on(cand or list(shard.nodes), nodes, resource)
 
     def name(self):

@@ -206,7 +206,8 @@ TaskGen = Generator[Any, Any, None]
 
 class Node:
     def __init__(self, name: str, resources: Dict[str, int],
-                 speed: float = 1.0, profile: HardwareProfile = UNIFORM):
+                 speed: float = 1.0, profile: HardwareProfile = UNIFORM,
+                 domain: str = ""):
         self.name = name
         self.capacity = dict(resources)           # resource -> lanes
         self.in_use: Dict[str, int] = defaultdict(int)
@@ -214,6 +215,10 @@ class Node:
         self.speed = speed                        # <1.0 => straggler
         self.profile = profile                    # backend tier hardware
         self.up = True
+        # failure-domain label (rack/zone): correlated fault injection
+        # kills whole domains and anti-affinity replication spreads over
+        # them; "" = topology-blind (the pre-domain default everywhere)
+        self.domain = domain
         # admitted-but-unfinished compute seconds per resource: the
         # "queue depth in seconds" load signal (maintained O(1) by the
         # compute handlers) that dispatch and the batch planner read
@@ -291,6 +296,17 @@ class Simulator:
         self.on_release: Optional[Callable[[Node, str], None]] = None
         self._waiters: Dict[str, List[Tuple[Node, Any, Callable]]] = \
             defaultdict(list)
+        # active network partition: node name -> group id, or None (the
+        # fault-free fast path is one `is None` check).  Two nodes are
+        # mutually reachable iff they map to the same group; unlisted
+        # nodes belong to group 0 (the majority/client side).  Reads
+        # whose every replica is across the cut park here until heal.
+        self.partition: Optional[Dict[str, int]] = None
+        self._partition_parked: List[Tuple[Node, Any, Callable]] = []
+        # dispatches whose only viable lanes sit across the cut park as
+        # bare callbacks (the dispatcher re-picks a node at heal)
+        self._partition_parked_calls: List[Callable] = []
+        self.partition_parked_dispatches = 0
         # per-op-type handler table (replaces an isinstance chain in the
         # hot path); exact-type keyed — subclassed ops resolve through
         # _handler_for, which memoizes the subclass into the table
@@ -353,6 +369,40 @@ class Simulator:
         waiting, future._waiting = future._waiting, []
         for cont in waiting:
             self.at(self.now, cont, value)
+
+    # -- partitions ---------------------------------------------------------
+
+    def reachable(self, a: str, b: str) -> bool:
+        """True iff node ``a`` can talk to node ``b`` right now.
+
+        Without an active partition every pair is reachable ("up" is the
+        only failure axis); under one, reachability is same-group
+        membership, with unlisted nodes on the majority side (group 0).
+        """
+        p = self.partition
+        if p is None:
+            return True
+        return p.get(a, 0) == p.get(b, 0)
+
+    def heal_partition(self) -> None:
+        """Clear the active partition and re-drive every read it parked.
+
+        Each parked op is stamped with the heal instant (``op._pstall``)
+        so tracing can split its interval into a ``partition_stall`` span
+        followed by the normal network transfer."""
+        self.partition = None
+        self.store.partition = None
+        parked, self._partition_parked = self._partition_parked, []
+        for node, op, cont in parked:
+            try:
+                op._pstall = self.now
+            except AttributeError:
+                pass                     # slotted op types: skip the stamp
+            self._execute(node, op, cont)
+        calls, self._partition_parked_calls = \
+            self._partition_parked_calls, []
+        for fn in calls:
+            fn()
 
     # -- resources ------------------------------------------------------------
 
@@ -536,6 +586,12 @@ class Simulator:
     def _op_get(self, node: Node, op, cont) -> None:
         rec, local = self.store.get(op.key, node=node.name)
         if rec is None:
+            if self.partition is not None and self.store.last_get_blocked:
+                # the object exists, but every replica is across the
+                # partition: park until heal (liveness over availability
+                # — the minority side must not invent data)
+                self._partition_parked.append((node, op, cont))
+                return
             if op.wait:
                 self._waiters[op.key].append((node, op, cont))
                 return

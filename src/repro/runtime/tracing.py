@@ -54,9 +54,15 @@ from .simulation import (BatchCompute, Compute, Get, Put, Sleep, Trigger,
 #: explained by a stall, which outranks the passive waits.  The blame
 #: sweep (``repro.workflows.blame``) charges every instant of an
 #: instance's e2e window to exactly one of these.
-CATEGORIES = ("compute", "network", "migration", "recovery",
-              "fault_stall", "retry", "queueing", "batch_wait", "barrier",
-              "admission_defer", "other")
+#: blame priority is tuple order (lower index wins the sweep).
+#: ``partition_stall`` sits ABOVE ``network``: a dispatch or read held
+#: at a partition boundary is also covered by the coarse ingress/
+#: transfer span, and the specific cause must win the overlap — every
+#: other relative order is unchanged, so partition-free decompositions
+#: are byte-identical
+CATEGORIES = ("compute", "partition_stall", "network", "migration",
+              "recovery", "fault_stall", "retry", "queueing",
+              "batch_wait", "barrier", "admission_defer", "other")
 
 _PRIORITY = {c: i for i, c in enumerate(CATEGORIES)}
 
@@ -351,7 +357,10 @@ class TraceRecorder:
             trace.raw.extend((_WAIT, t0, t1, node.name,
                               f"get_wait:{op.key}", 0.0, 0))
         else:                           # plain data op: Get/Put/Trigger
-            trace.raw.extend((kind, t0, t1, node.name, op.key, 0.0, 0))
+            # slot 5 carries the partition-heal stamp for reads a cut
+            # parked (Simulator.heal_partition); 0.0 everywhere else
+            ps = getattr(op, "_pstall", 0.0) if kind == _GET else 0.0
+            trace.raw.extend((kind, t0, t1, node.name, op.key, ps, 0))
 
     def _emit(self, trace: InstanceTrace, raw: List[Any], i: int) -> None:
         """Categorize the raw op record at ``raw[i:i+_RAW_W]`` into
@@ -399,6 +408,17 @@ class TraceRecorder:
         elif kind == _WAIT:
             trace.spans.append(Span(raw[i + 4], "barrier", t0, t1, nn))
         elif kind == _GET:
+            ps = raw[i + 5]
+            if ps > t0:
+                # the read parked behind a partition until the heal
+                # stamp: that share is the cut's fault, the remainder is
+                # the ordinary transfer — together they telescope over
+                # [t0, t1] so decomposition exactness is unaffected
+                cut = min(ps, t1)
+                trace.spans.append(Span("get", "partition_stall", t0,
+                                        cut, nn, {"key": raw[i + 4]}))
+                self.n_spans += 1
+                t0 = cut
             if t1 - t0 <= self.local_cut:
                 return      # local op: the sweep charges it to "other"
             trace.spans.append(Span("get", "network", t0, t1, nn,

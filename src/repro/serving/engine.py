@@ -53,7 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GroupSequencer
+from repro.core import EpochFence, GroupSequencer
 from repro.models import Model
 from repro.runtime.batching import BatchCostModel
 from repro.runtime.faults import FailureEvent, RetryPolicy
@@ -172,8 +172,13 @@ class ServingEngine:
         self.retry = retry or RetryPolicy()
         self.checkpoint_every = checkpoint_every
         self.outages: List[_RowOutage] = []
-        # per-group FIFO commit order + exactly-once commit accounting
+        # per-group FIFO commit order + exactly-once commit accounting;
+        # the fence extends exactly-once from crash faults to split-brain:
+        # every group re-route (gang repair) advances the group's epoch,
+        # and a commit still holding the pre-repair token is rejected
+        # into dup_effects instead of applied
         self.sequencer = GroupSequencer()
+        self.fence = EpochFence()
         self.dup_effects = 0
         self.order_violations = 0
         self.shed_turns = 0
@@ -225,7 +230,8 @@ class ServingEngine:
             raise KeyError(f"unknown row {row!r}")
         assert at >= self._hwm, \
             f"fail_row at {at} is behind the driven clock {self._hwm}"
-        ev = FailureEvent(node=f"row{row}", t_down=at, t_up=at + duration)
+        ev = FailureEvent(node=f"row{row}", t_down=at, t_up=at + duration,
+                          kind="row")
         self.outages.append(_RowOutage(row=row, t_down=at,
                                        t_up=at + duration, event=ev))
         self.outages.sort(key=lambda o: o.t_down)
@@ -272,6 +278,9 @@ class ServingEngine:
                     tgt = min(live, key=lambda i: (
                         0 if self.rows[i].free_slot() is not None else 1,
                         self.rows[i].backlog(o.t_down), proj[i]))
+                    # re-homing claims the group: any in-flight commit
+                    # still holding the pre-repair token is fenced off
+                    self.fence.advance(lbl)
                     self.router.pin_group(lbl, tgt)
                     proj[tgt] += 1
                     o.event.groups_rerouted += 1
@@ -451,6 +460,12 @@ class ServingEngine:
         there is no retry/recovery, so the fault-free path is unchanged."""
         row_idx = plan.row_idx
         row = self.rows[row_idx]
+        # epoch token for the commit below: captured after the last fault
+        # sweep of the attempt loop, so a repair that re-homed this group
+        # BEFORE the surviving attempt is fine, while one racing the
+        # attempt itself (an async replay scenario) gets fenced
+        label = self._group_label(s)
+        fence_tok = self.fence.current(label)
         self.adapters.ensure_resident(row_idx, s.adapter)
 
         if s.row is not None and s.row != row_idx:
@@ -519,8 +534,10 @@ class ServingEngine:
         s.length = int(row.lengths[slot])
 
         # -- exactly-once commit: effects apply against the turn index
-        # captured at admission; a duplicated replay cannot re-commit
-        if s.turns != turn_idx:
+        # captured at admission; a duplicated replay cannot re-commit,
+        # and a stale-epoch attempt (its group re-homed mid-service by a
+        # partitioned or superseding repair) is fenced instead of applied
+        if s.turns != turn_idx or not self.fence.check(label, fence_tok):
             self.dup_effects += 1
             return out, self.metrics[-1]
         s.turns = turn_idx + 1

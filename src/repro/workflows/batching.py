@@ -54,7 +54,8 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core import instance_of
 from repro.runtime.batching import BatchCostModel
-from repro.runtime.scheduler import _least_loaded_on, hedge_candidates
+from repro.runtime.scheduler import (_least_loaded_on, dispatchable,
+                                     hedge_candidates)
 from repro.runtime.simulation import BatchCompute, SimFuture, WaitFor
 
 
@@ -513,10 +514,11 @@ class StageBatcher:
         member — the load signal the planner's window tracks (the same
         "prefer free lanes" member ``pick_batch`` will dispatch to)."""
         nodes = self.rt.nodes
+        store = self.rt.store
         best = None
         for name in self._shard_for(key, slot).nodes:
             node = nodes[name]
-            if not node.up:
+            if not dispatchable(store, name, nodes):
                 continue
             pending = (node.pending[resource]
                        / (node.capacity.get(resource, 1) or 1))
@@ -527,9 +529,10 @@ class StageBatcher:
     def _resource_idle(self, batch: _OpenBatch) -> bool:
         """A free lane with an empty queue on any of the slot's nodes?"""
         nodes = self.rt.nodes
+        store = self.rt.store
         for name in self._shard_for(batch.keys[0], batch.slot).nodes:
             node = nodes[name]
-            if not node.up:
+            if not dispatchable(store, name, nodes):
                 continue
             if (node.in_use[batch.resource]
                     < node.capacity.get(batch.resource, 1)

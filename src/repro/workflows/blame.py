@@ -7,8 +7,9 @@ interval sweep, not per-span summing: all spans are clipped to the
 instance's ``[t_submit, t_complete]`` window, the window is cut at every
 span boundary, and each elementary interval is charged to the highest-
 priority category active over it (compute beats network beats stalls
-beats passive waits); intervals covered by nothing are charged to
-``other``.  Because the elementary intervals partition the window
+beats passive waits — except ``partition_stall``, which beats the
+coarse network spans that cover the same held interval); intervals
+covered by nothing are charged to ``other``.  Because the elementary intervals partition the window
 exactly, the per-category durations sum to the e2e latency **by
 construction** — concurrency (fan-out stages running in parallel),
 overlap (a hedge racing a stall) and double-recording cannot break the

@@ -47,12 +47,20 @@ class Tier:
     ``spares`` declares extra standby nodes (named after the active ones)
     that exist in the cluster but start outside every pool — the
     autoscaler's scale-out inventory.
+
+    ``domains`` > 1 stripes the tier's nodes (spares included) over that
+    many failure domains round-robin: node ``i`` lands in zone
+    ``<name>-d{i % domains}``.  Placement replication spreads over the
+    labels (anti-affinity) and ``FaultInjector.fail_domain`` kills whole
+    zones; the default 1 keeps the tier topology-blind (no labels, no
+    behavior change anywhere).
     """
     name: str
     n_nodes: int
     resources: Dict[str, int]
     profile: HardwareProfile = UNIFORM
     spares: int = 0
+    domains: int = 1
 
     @property
     def nodes(self) -> List[str]:
@@ -62,6 +70,14 @@ class Tier:
     def spare_nodes(self) -> List[str]:
         return [f"{self.name}{i}"
                 for i in range(self.n_nodes, self.n_nodes + self.spares)]
+
+    def domain_of(self, node: str) -> str:
+        """Failure-domain label of one of this tier's nodes ("" when the
+        tier is not striped)."""
+        if self.domains <= 1:
+            return ""
+        i = int(node[len(self.name):])
+        return f"{self.name}-d{i % self.domains}"
 
 
 @dataclasses.dataclass
@@ -118,11 +134,21 @@ class Stage:
     Custom-body stages run the supplied generator verbatim (yielding the
     runtime's Get/Put/Compute ops) — the graph still records their
     trigger pool, resource and ordering so compilation stays uniform.
+
+    ``degraded_cost`` declares a cheaper brownout variant of a
+    synthesized stage (a smaller model, coarser retrieval, sampled
+    frames): when the runtime's brownout controller is engaged the stage
+    fires with this cost instead of ``cost``, preserving every event,
+    emit, and accounting invariant — degradation changes quality, never
+    topology.  ``priority`` orders the sacrifice: class 0 degrades first,
+    higher classes only under deeper capacity loss.
     """
     name: str
     pool: str                             # trigger pool prefix
     resource: str = "gpu"
     cost: float = 0.0
+    degraded_cost: Optional[float] = None
+    priority: int = 0
     reads: List[Read] = dataclasses.field(default_factory=list)
     emits: List[Emit] = dataclasses.field(default_factory=list)
     join: bool = False                    # fan-in barrier (fire once/instance)
@@ -158,11 +184,14 @@ class WorkflowGraph:
     def add_tier(self, name: str, n_nodes: int,
                  resources: Dict[str, int],
                  profile: HardwareProfile = UNIFORM,
-                 spares: int = 0) -> Tier:
+                 spares: int = 0, domains: int = 1) -> Tier:
         if name in self.tiers:
             raise WorkflowGraphError(f"duplicate tier {name!r}")
+        if domains < 1:
+            raise WorkflowGraphError(
+                f"tier {name!r}: domains must be >= 1, got {domains}")
         tier = Tier(name, n_nodes, dict(resources), profile=profile,
-                    spares=spares)
+                    spares=spares, domains=domains)
         self.tiers[name] = tier
         return tier
 
@@ -197,16 +226,34 @@ class WorkflowGraph:
                   emits: Sequence[Emit] = (), join: bool = False,
                   sink: bool = False, body: Optional[Callable] = None,
                   order_of: Optional[Callable[[str], str]] = None,
-                  batchable: bool = True) -> Stage:
+                  batchable: bool = True,
+                  degraded_cost: Optional[float] = None,
+                  priority: int = 0) -> Stage:
         if any(s.name == name for s in self.stages):
             raise WorkflowGraphError(f"duplicate stage {name!r}")
+        if degraded_cost is not None and (
+                body is not None or degraded_cost > cost):
+            raise WorkflowGraphError(
+                f"stage {name!r}: degraded_cost needs a synthesized body "
+                f"and must not exceed cost")
         stage = Stage(name=name, pool=pool, resource=resource, cost=cost,
+                      degraded_cost=degraded_cost, priority=priority,
                       reads=list(reads), emits=list(emits), join=join,
                       sink=sink, body=body, order_of=order_of,
                       batchable=batchable)
         self.stages.append(stage)
         self._validated = False
         return stage
+
+    def domain_of(self, node: str) -> str:
+        """Failure-domain label of ``node`` over every tier ("" when its
+        tier is unstriped)."""
+        best = None
+        for t in self.tiers.values():
+            if node.startswith(t.name) and node[len(t.name):].isdigit():
+                if best is None or len(t.name) > len(best.name):
+                    best = t            # longest tier-name prefix wins
+        return best.domain_of(node) if best is not None else ""
 
     # -- derived structure --------------------------------------------------
 

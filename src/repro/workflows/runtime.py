@@ -36,7 +36,8 @@ import dataclasses
 from collections import defaultdict
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core import (AtomicGroupUpdate, CascadeStore, GroupSequencer,
+from repro.core import (AtomicGroupUpdate, CascadeStore, EpochFence,
+                        GroupSequencer,
                         HashPlacement, InstanceAffinity,
                         LoadAwarePlacement, RendezvousPlacement,
                         ReplicatedPlacement, instance_label, instance_of,
@@ -266,6 +267,7 @@ class WorkflowRuntime:
                  admission_defer: float = 0.02,
                  admission_max_defer: float = 0.2,
                  exactly_once: bool = False,
+                 brownout: Optional[float] = None,
                  tracing: Any = False):
         if not graph._validated:
             graph.validate()
@@ -379,6 +381,36 @@ class WorkflowRuntime:
             self.rt.trace_of = self._trace_of
         self.fault_injector: Optional[FaultInjector] = None
         self.fault_repins = 0
+        # split-brain fencing: every gang-repair claim advances the
+        # label's epoch, and replace_gang_pins drops claims whose token
+        # went stale — a partitioned minority (or a superseded repair)
+        # can never double-pin.  Fault-free runs never advance an epoch.
+        self.fence = EpochFence()
+        self._deferred_labels: set = set()   # migrations blocked by a cut
+        # brownout degraded mode: `brownout` is the down-fraction per
+        # degradation level (e.g. 0.25 -> losing a quarter of the active
+        # fleet engages level 1).  At level L every synthesized stage
+        # with a degraded_cost and priority < L fires its cheap variant
+        # instead of shedding work — capacity loss costs quality first,
+        # completions last.  None (default) never touches the cost path.
+        self.brownout = brownout
+        self.brownout_level = 0
+        self.brownout_engagements = 0
+        self.degraded_firings = 0
+
+        # failure-domain topology: stamp every node from its tier's
+        # striping and thread each slot's (unanimous) member domain into
+        # the pool engines so replication spreads anti-affinity and
+        # repair can avoid the dead zone.  Unstriped graphs skip all of
+        # it — no labels, byte-identical placement.
+        if any(t.domains > 1 for t in graph.tiers.values()):
+            for name, nd in self.rt.nodes.items():
+                nd.domain = graph.domain_of(name)
+            for p in store.pools.values():
+                for shard in p.shards.values():
+                    doms = {self.rt.nodes[n].domain for n in shard.nodes}
+                    if len(doms) == 1 and "" not in doms:
+                        p.engine.set_domain(shard.name, doms.pop())
         self.planner: Optional[BatchPlanner] = None
         self.batcher: Optional[StageBatcher] = None
         if batching:
@@ -514,7 +546,18 @@ class WorkflowRuntime:
                         for k in r.keys(inst):
                             yield Get(k, required=r.required, wait=r.wait)
                     if stage.cost > 0:
-                        if self.batcher is not None and stage.batchable:
+                        if self.brownout_level > 0 and \
+                                stage.degraded_cost is not None and \
+                                stage.priority < self.brownout_level:
+                            # brownout: fire the cheap variant — same
+                            # events, same emits, same accounting, less
+                            # service demand.  Bypasses the batcher (the
+                            # degraded variant is priced standalone)
+                            self.degraded_firings += 1
+                            if stage.degraded_cost > 0:
+                                yield Compute(stage.resource,
+                                              stage.degraded_cost)
+                        elif self.batcher is not None and stage.batchable:
                             yield from self.batcher.compute(
                                 ctx, stage, deadline=rec.deadline)
                         else:
@@ -762,8 +805,28 @@ class WorkflowRuntime:
         if self.fault_injector is None:
             inj = FaultInjector(self.rt, retry=retry)
             inj.on_down.append(self._on_node_down)
+            # a heal finishes what a cut deferred: re-pin gangs still on
+            # dead slots and move the object copies that could not cross
+            inj.on_heal.append(self._on_heal)
+            if self.brownout is not None:
+                inj.on_down.append(self._brownout_eval)
+                inj.on_up.append(self._brownout_eval)
             self.fault_injector = inj
         return self.fault_injector
+
+    def _brownout_eval(self, ev: Optional[FailureEvent] = None) -> None:
+        """Recompute the degradation level from the live down-fraction of
+        the active (pool-member) fleet.  Engagements count level raises;
+        recovery lowers the level back toward 0 and restores full-cost
+        firings automatically (the cost pick reads the level per firing).
+        """
+        names = {n for p in self.graph.pools
+                 for n in self.graph.nodes_of(p)}
+        down = sum(1 for n in names if not self.rt.nodes[n].up)
+        level = int(down / max(len(names), 1) / self.brownout + 1e-9)
+        if level > self.brownout_level:
+            self.brownout_engagements += 1
+        self.brownout_level = level
 
     def _gang_pools(self) -> List[str]:
         """Instance pools with the anchor first (the order
@@ -791,6 +854,23 @@ class WorkflowRuntime:
         """
         if not self.gang_pin:
             return
+        self._repair_slots(avoid_domain=ev.domain
+                           if ev.kind == "domain" else "")
+
+    def _on_heal(self, ev: FailureEvent) -> None:
+        """Partition heal: run the repair sweep the cut blocked (gangs
+        still pinned to dead slots get majority-placed homes now that the
+        whole fleet is a repair target again) and finish the deferred
+        cross-cut object migrations."""
+        if not self.gang_pin:
+            return
+        self._repair_slots()
+        labels, self._deferred_labels = self._deferred_labels, set()
+        if labels:
+            for prefix in self._gang_pools():
+                self._migrate_stranded(self.store.pools[prefix], labels)
+
+    def _repair_slots(self, avoid_domain: str = "") -> None:
         anchor_pool = self.store.pools[self.anchor_pool]
         anchor = anchor_pool.engine
         dead = [s for s in anchor.shards
@@ -798,13 +878,29 @@ class WorkflowRuntime:
         if not dead:
             return
         survivors = [s for s in anchor.shards if s not in dead]
+        p = self.rt.sim.partition
+        if p is not None:
+            # split-brain safety: repair authority lives on the majority
+            # side of the cut (group 0) — a slot across the partition is
+            # alive but unpinnable, and if no majority-side slot
+            # survives, repair waits for heal instead of letting the
+            # minority elect itself (the fence would reject its pins
+            # anyway; not attempting them keeps pin state clean)
+            survivors = [s for s in survivors
+                         if all(p.get(n, 0) == 0
+                                for n in anchor_pool.shards[s].nodes)]
         stranded = anchor.pinned_labels(dead)
         if not survivors or not stranded:
-            return          # total outage, or nobody pinned there
+            return          # total outage / cut-off, or nobody pinned
+        # claim: one fence epoch per gang; replace_gang_pins re-checks at
+        # commit so a stale claim (superseded mid-flight) pins nothing
+        epochs = {lbl: self.fence.advance(lbl) for lbl in stranded}
         pools = self._gang_pools()
-        replace_gang_pins(self.store, pools, stranded, survivors)
-        self.fault_repins += len(stranded)
-        labels = set(stranded)
+        placed = replace_gang_pins(self.store, pools, stranded, survivors,
+                                   fence=self.fence, epochs=epochs,
+                                   avoid_domain=avoid_domain)
+        self.fault_repins += len(placed)
+        labels = set(placed)
         for prefix in pools:
             self._migrate_stranded(self.store.pools[prefix], labels)
 
@@ -830,6 +926,7 @@ class WorkflowRuntime:
                 if lbl in labels:
                     tr_of[lbl] = tr
         # stage: collect every stranded record per group, mutating nothing
+        sim = self.rt.sim
         staged: Dict[str, List[Tuple[Any, str, Any]]] = {}
         placed = set()
         for shard in list(pool.shards.values()):
@@ -839,6 +936,14 @@ class WorkflowRuntime:
                 home = pool.home(key)
                 if home.name == shard.name or key in home.objects:
                     placed.add(key)
+                    continue
+                if sim.partition is not None and not any(
+                        sim.reachable(a, b)
+                        for a in shard.nodes for b in home.nodes):
+                    # the copy would cross the cut: defer to heal (the
+                    # read side parks on the same condition, so nothing
+                    # observes the stale location meanwhile)
+                    self._deferred_labels.add(rec.affinity)
                     continue
                 placed.add(key)
                 staged.setdefault(rec.affinity, []).append(
@@ -866,18 +971,28 @@ class WorkflowRuntime:
 
     # -- gang placement -----------------------------------------------------
 
+    def _slot_unadmittable(self, pool, sname: str) -> bool:
+        """A fresh gang must not pin here: every member down, or the slot
+        sits across an active partition (the client lives on the majority
+        side — its trigger put could not even reach the pin)."""
+        if self._slot_dead(pool, sname):
+            return True
+        p = self.rt.sim.partition
+        return p is not None and any(p.get(n, 0) != 0
+                                     for n in pool.shards[sname].nodes)
+
     def _admit_pins(self, instance: str) -> None:
         label = instance_label(instance)
         anchor_pool = self.store.pools[self.anchor_pool]
         anchor = anchor_pool.engine
         home = anchor.home_of(label)
         if self.fault_injector is not None and \
-                self._slot_dead(anchor_pool, home):
+                self._slot_unadmittable(anchor_pool, home):
             # fault-aware admission: policy placement is blind to Node.up,
             # so re-place over live slots (same mechanism as gang repair)
             # instead of pinning a fresh gang to a slot that cannot serve
             survivors = [s for s in anchor.shards
-                         if not self._slot_dead(anchor_pool, s)]
+                         if not self._slot_unadmittable(anchor_pool, s)]
             if survivors:
                 replace_gang_pins(self.store, self._gang_pools(),
                                   [label], survivors)
@@ -919,6 +1034,21 @@ class WorkflowRuntime:
             out["fault_repins"] = self.fault_repins
             if self.fault_injector.retry is not None:
                 out["fault_retries"] = rep.tasks_retried
+            if rep.domain_downtime:
+                out["fault_domain_downtime_s"] = {
+                    d: round(v, 4)
+                    for d, v in sorted(rep.domain_downtime.items())}
+            if rep.partition_time:
+                out["fault_partition_s"] = round(rep.partition_time, 4)
+                out["partition_blocked_gets"] = \
+                    self.store.stats.partition_blocked
+                out["partition_parked_dispatches"] = \
+                    self.rt.sim.partition_parked_dispatches
+            out["fence_rejected"] = self.fence.rejected
+        if self.brownout is not None:
+            out["brownout_engagements"] = self.brownout_engagements
+            out["degraded_firings"] = self.degraded_firings
+            out["brownout_level"] = self.brownout_level
         if self.exactly_once:
             out["dup_triggers_dropped"] = self.dup_triggers_dropped
             out["seq_max_queue"] = self.sequencer.max_queue_len

@@ -432,6 +432,53 @@ def test_hedging_is_accounting_transparent_when_it_never_fires():
     assert not plain.batcher._open and not hedged.batcher._open
 
 
+# -- partition reachability at dispatch ---------------------------------------
+
+def test_replica_scheduler_prefers_reachable_replica_over_unreachable_home():
+    """Under a partition "up" is not "usable": dispatch is client-driven
+    and the client sits on the majority side (group 0), so a minority-side
+    home shard — alive, idle-looking — must lose to a reachable replica
+    member even when the replica carries queued work."""
+    from repro.core import HashPlacement, ReplicatedPlacement
+    from repro.runtime import ReplicaScheduler, dispatchable
+
+    store = CascadeStore([f"n{i}" for i in range(8)])
+    store.create_object_pool("/p", store.nodes, 8,
+                             affinity_set_regex=r"/[a-z0-9]+_[0-9]+_",
+                             policy=ReplicatedPlacement(HashPlacement(),
+                                                        n_replicas=2))
+    store.put("/p/vid_1_0", b"x")
+    home = store.shard_of("/p/vid_1_0")
+    homes = store.pools["/p"].replica_homes("/p/vid_1_0")
+    replica = next(h for h in homes if h.name != home.name)
+    nodes = {n: Node(n, dict(RES)) for n in store.nodes}
+    sched = ReplicaScheduler(store)
+    members = {n for h in homes for n in h.nodes}
+
+    # fault-free: any replica member is a legal pick
+    assert sched.pick(home, "/p/vid_1_0", nodes, store.nodes) in members
+
+    # cut the home's members onto the minority side; leave them up and
+    # idle while the reachable replica carries work — reachability must
+    # dominate the load signal
+    store.partition = {n: 1 for n in home.nodes}
+    for n in replica.nodes:
+        nodes[n].in_use["gpu"] = 1
+    assert all(not dispatchable(store, n, nodes) for n in home.nodes)
+    picked = sched.pick(home, "/p/vid_1_0", nodes, store.nodes)
+    assert picked in replica.nodes and picked not in home.nodes
+    picked = sched.pick_batch(home, ["/p/vid_1_0"], nodes, store.nodes,
+                              resource="gpu")
+    assert picked in replica.nodes and picked not in home.nodes
+
+    # heal: the home's members become dispatchable again
+    store.partition = None
+    assert all(dispatchable(store, n, nodes) for n in home.nodes)
+    for n in replica.nodes:
+        nodes[n].in_use["gpu"] = 0
+    assert sched.pick(home, "/p/vid_1_0", nodes, store.nodes) in members
+
+
 # -- randomized chaos property (slow job) -------------------------------------
 
 def _chaos_trial(rng):
@@ -443,6 +490,7 @@ def _chaos_trial(rng):
 
     shape = rng.choice(sorted(WORKFLOW_SHAPES))
     shards = rng.randint(2, 3)
+    domains = rng.choice([1, 2])
     replicas = rng.choice([1, 2])
     mode = rng.choice(["atomic", "atomic+batch", "atomic+abatch"])
     hedge = rng.choice([None, 0.02]) if mode != "atomic" else None
@@ -455,6 +503,11 @@ def _chaos_trial(rng):
     rate = rng.uniform(100.0, 400.0)
 
     graph = WORKFLOW_SHAPES[shape](shards=shards)
+    if domains > 1:
+        # stripe the primary tier over failure domains: placement spreads
+        # replicas anti-affinity and the fault schedule below may take a
+        # whole zone down at once
+        graph.tiers[shape].domains = domains
     wrt = WorkflowRuntime(graph, read_replicas=replicas,
                           hedge_after=hedge, admission=admission,
                           exactly_once=exactly_once,
@@ -488,6 +541,19 @@ def _chaos_trial(rng):
         inj.fail_node(rng.choice(tier_nodes),
                       at=rng.uniform(0.0, horizon),
                       duration=rng.uniform(0.01, 0.5))
+    if domains > 1 and rng.random() < 0.5:
+        # correlated outage: a whole zone dies at once
+        inj.fail_domain(f"{shape}-d{rng.randrange(domains)}",
+                        at=rng.uniform(0.0, horizon),
+                        duration=rng.uniform(0.01, 0.5))
+    partitioned = rng.random() < 0.5
+    if partitioned:
+        # network split: a random strict subset of the primary tier is cut
+        # off (up but unreachable) for a while mid-stream
+        minority = rng.sample(sorted(tier_nodes),
+                              rng.randint(1, max(1, len(tier_nodes) - 1)))
+        inj.partition(((), minority), at=rng.uniform(0.0, horizon),
+                      duration=rng.uniform(0.01, 0.3))
     deadline = 1.0 if admission else None
     for i in range(n_inst):
         wrt.submit(f"i{i}", at=0.001 + i / rate, deadline=deadline)
@@ -530,12 +596,23 @@ def _chaos_trial(rng):
             assert ev.retry_failovers + ev.retries_exhausted <= ev.stalled
     # every duplicated delivery was absorbed, none executed (the fired /
     # done exactness above already proves no duplicate completions), and
-    # the sequencer drained back to its bounded-empty state
+    # the sequencer drained back to its bounded-empty state.  With a
+    # partition in the schedule the same exactness holds ACROSS the cut:
+    # the fired/done equality above is the zero-double-commit witness,
+    # and the gate instrumentation saw at most one body per label even
+    # while work was parked at the boundary
     if exactly_once:
         if n_dups:
             assert wrt.dup_triggers_dropped >= n_dups
         assert wrt.sequencer.n_labels() == 0
         assert not active
+    # the cut healed and left nothing parked behind: zero pending leak
+    # across the partition boundary
+    if partitioned:
+        sim = wrt.rt.sim
+        assert sim.partition is None
+        assert not sim._partition_parked
+        assert not sim._partition_parked_calls
 
 
 try:

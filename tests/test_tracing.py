@@ -107,6 +107,38 @@ def test_fault_stall_is_blamed_under_unwired_chaos():
     assert "node_down" in names and "node_up" in names
 
 
+def test_blame_sums_to_e2e_with_partition_active():
+    """Exactness survives a network cut: work held at the partition
+    boundary surfaces as ``partition_stall`` (not silently as network or
+    other), and every trace still decomposes to its e2e exactly."""
+    g = WorkflowGraph("cut")
+    g.add_tier("t", 4, RES)
+    for p in ("/in", "/out"):
+        g.add_pool(p, tier="t", shards=4)
+    g.add_stage("work", pool="/in", resource="gpu", cost=0.004,
+                emits=[Emit("/out", fanout=1, size=1024)], sink=True)
+    wrt = WorkflowRuntime(g.validate(), read_replicas=2, tracing=True,
+                          **mode_kwargs("affinity"))
+    inj = wrt.enable_faults()
+    # cut half the tier off mid-stream: groups whose every replica lane
+    # sits across the cut park their dispatches until heal
+    inj.partition(((), ("t1", "t3")), at=0.06, duration=0.2)
+    for i in range(40):
+        wrt.submit(f"w{i}", at=0.05 + i * 0.002)
+    wrt.run()
+    assert wrt.summary()["n"] == 40                     # nothing lost
+    assert wrt.rt.sim.partition_parked_dispatches > 0   # the cut bit
+    for tr in wrt.tracer.traces():
+        parts = decompose(tr)
+        assert set(parts) == set(CATEGORIES)
+        assert all(v >= 0.0 for v in parts.values()), parts
+        assert abs(sum(parts.values()) - tr.e2e) < 1e-6, (tr.instance,
+                                                          parts, tr.e2e)
+    assert wrt.blame.totals["partition_stall"] > 0.0
+    assert abs(sum(wrt.blame.totals.values())
+               - wrt.blame.e2e_total) < 1e-6
+
+
 # -- DES transparency ---------------------------------------------------------
 
 def _chaos_summary(tracing):
