@@ -111,6 +111,12 @@ SUITE_DELTA_METRICS = {
     # the split-brain fence, is a survival regression
     "fig13": {**DELTA_METRICS, "lost_instances": 0.0, "dup_effects": 0.0,
               "order_violations": 0.0, "fence_rejected": 0.0},
+    # fig14's cold-ladder counters are hard floors: a lost instance, a
+    # stale prefetch install serving a read, or a cold scatter run where
+    # prefetch never serves anything (no_prefetch_hits flips to 1) is a
+    # prefetch-correctness regression
+    "fig14": {**DELTA_METRICS, "lost": 0.0, "prefetch_stale": 0.0,
+              "no_prefetch_hits": 0.0},
 }
 
 

@@ -14,8 +14,8 @@ import time
 from . import (azure_mode, fig3_single_client, fig4_three_clients,
                fig5_no_caching, fig6_replication, fig7_workflows,
                fig8_batching, fig9_adaptive, fig10_elastic, fig11_chaos,
-               fig12_serving_chaos, fig13_domains, micro_affinity,
-               roofline, serving_affinity)
+               fig12_serving_chaos, fig13_domains, fig14_prefetch,
+               micro_affinity, roofline, serving_affinity)
 from .common import (bench_regressions, emit, load_bench_json,
                      write_bench_json)
 
@@ -31,6 +31,7 @@ SUITES = {
     "fig11": fig11_chaos,
     "fig12": fig12_serving_chaos,
     "fig13": fig13_domains,
+    "fig14": fig14_prefetch,
     "azure": azure_mode,
     "micro": micro_affinity,
     "serving": serving_affinity,

@@ -50,6 +50,10 @@ class StoreStats:
     migrations: int = 0           # group relocations (GroupMigrator)
     bytes_migrated: int = 0
     partition_blocked: int = 0    # reads with no reachable replica
+    prefetch_installs: int = 0    # warm-up transfers that landed valid
+    prefetch_stale: int = 0       # dropped: version moved / unreachable
+    prefetch_hits: int = 0        # gets served from a prefetched entry
+    bytes_prefetched: int = 0
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -161,6 +165,12 @@ class CascadeStore:
         self.pools: Dict[str, ObjectPool] = {}
         self.udls: List[UDL] = []
         self.caches: Dict[str, Dict[str, ObjectRecord]] = {
+            n: {} for n in self.nodes}
+        # node -> {key: version installed by prefetch}; entries are
+        # dropped the moment anything else touches the cache line
+        # (demand fill, invalidation), so `prefetch_hits` only counts
+        # reads the warm-up genuinely made local.
+        self.prefetch_marks: Dict[str, Dict[str, int]] = {
             n: {} for n in self.nodes}
         self.cache_enabled = True
         self.stats = StoreStats()
@@ -332,6 +342,8 @@ class CascadeStore:
             cached = self.caches[node].get(key)
             if cached is not None and cached.version == rec.version:
                 self.stats.local_gets += 1
+                if key in self.prefetch_marks[node]:
+                    self.stats.prefetch_hits += 1
                 return cached, True
         if local:
             self.stats.local_gets += 1
@@ -344,7 +356,52 @@ class CascadeStore:
             pool.engine.record_load(shard.name, rec.size)
             if node is not None and self.cache_enabled:
                 self.caches[node][key] = rec
+                self.prefetch_marks[node].pop(key, None)
         return rec, local
+
+    def prefetch_install(self, node: str, key: str,
+                         version: Optional[int] = None) -> int:
+        """Land a completed warm-up transfer in ``node``'s cache.
+
+        Returns the bytes installed, or 0 when the transfer is a no-op:
+        the record vanished, the node holds it natively, caching is off,
+        every holder is across an active partition, or — the correctness
+        case — ``version`` (stamped at plan time) no longer matches the
+        live record because a write/migration raced the transfer.  The
+        version mismatch and unreachable cases count ``prefetch_stale``;
+        nothing stale is ever installed.
+        """
+        if not self.cache_enabled:
+            return 0
+        try:
+            pool = self.pool_for(key)
+        except KeyError:
+            return 0
+        rec = None
+        p = self.partition
+        rg = p.get(node, 0) if p is not None else 0
+        reachable = p is None
+        for shard in pool.replica_homes(key):
+            r = shard.objects.get(key)
+            if r is None:
+                continue
+            if node in shard.nodes:
+                return 0
+            rec = r
+            if p is not None and any(p.get(m, 0) == rg
+                                     for m in shard.nodes):
+                reachable = True
+        if rec is None:
+            return 0
+        if not reachable or (version is not None
+                             and rec.version != version):
+            self.stats.prefetch_stale += 1
+            return 0
+        self.caches[node][key] = rec
+        self.prefetch_marks[node][key] = rec.version
+        self.stats.prefetch_installs += 1
+        self.stats.bytes_prefetched += rec.size
+        return rec.size
 
     def delete_prefix(self, prefix: str) -> int:
         n = 0
@@ -366,6 +423,9 @@ class CascadeStore:
             for k in keys:
                 if cache.pop(k, None) is not None:
                     n += 1
+        for marks in self.prefetch_marks.values():
+            for k in keys:
+                marks.pop(k, None)
         return n
 
     # -- introspection -------------------------------------------------------------

@@ -6,20 +6,53 @@ declared the correlation, so the platform can warm the node's cache *before*
 the task (or a downstream stage) reads the objects.  The engine returns
 prefetch plans; the runtime executes them (overlapping with compute) and the
 store's cache makes subsequent gets local.
+
+Two planners share one candidate filter and one byte budget:
+
+  * :meth:`PrefetchEngine.plan_for_task` — the affinity sweep: every
+    same-label object in a pool, for "a task with this label just landed
+    here" callers;
+  * :meth:`PrefetchEngine.plan_for_keys` — an explicit key list, for the
+    workflow layer, which knows at gang admission exactly which keys every
+    downstream stage will read (``Stage.reads``, join inputs).
+
+The byte cap (``max_bytes_per_plan``) is enforced **globally and
+deterministically**: candidates are gathered first (sorted by key in the
+affinity sweep; caller order in the explicit form), then taken greedily
+until the next object would overflow the cap.  Objects skipped for budget
+are counted in ``skipped_over_budget`` — never silently dropped per-shard,
+so a large object early in one shard cannot shadow small objects in
+another.
+
+Plans carry the **version** of every record at plan time.  Execution is
+asynchronous (the DES charges NIC transfer time), and the store's
+:meth:`~repro.core.object_store.CascadeStore.prefetch_install` re-checks
+the version at arrival: a write, migration, or gang repair that bumped the
+record between plan and install makes the transfer a counted no-op instead
+of a stale cache entry.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from .object_store import CascadeStore, ObjectRecord
 
 
 @dataclasses.dataclass
 class PrefetchPlan:
+    """One node's warm-up shipment: keys + the versions/sizes planned.
+
+    ``keys``/``versions``/``sizes`` are parallel lists; ``speculative``
+    marks fan-in staging plans (their bytes count against the runtime's
+    wasted-speculation budget when the guess misses).
+    """
     node: str
     keys: List[str]
     total_bytes: int
+    versions: List[int] = dataclasses.field(default_factory=list)
+    sizes: List[int] = dataclasses.field(default_factory=list)
+    speculative: bool = False
 
 
 class PrefetchEngine:
@@ -28,34 +61,105 @@ class PrefetchEngine:
         self.max_bytes = max_bytes_per_plan
         self.issued: int = 0
         self.bytes_issued: int = 0
+        self.skipped_over_budget: int = 0
 
-    def plan_for_task(self, pool_prefix: str, label: str, node: str
-                      ) -> Optional[PrefetchPlan]:
-        """All same-affinity objects not yet cached/local at `node`."""
-        pool = self.store.pools[pool_prefix]
-        keys, total = [], 0
-        for shard in pool.shards.values():
-            local = node in shard.nodes
-            for k, rec in shard.objects.items():
-                if rec.affinity != label:
-                    continue
-                if local:
-                    continue
-                cached = self.store.caches.get(node, {}).get(k)
-                if cached is not None and cached.version == rec.version:
-                    continue
-                if total + rec.size > self.max_bytes:
-                    break
-                keys.append(k)
-                total += rec.size
+    # -- candidate filter ---------------------------------------------------
+
+    def _candidate(self, key: str, node: str) -> Optional[ObjectRecord]:
+        """The live record iff prefetching ``key`` to ``node`` would help:
+        it exists, is not already node-local, is not validly cached, and
+        (under an active partition) at least one holder is reachable."""
+        try:
+            pool = self.store.pool_for(key)
+        except KeyError:
+            return None
+        rec = None
+        p = self.store.partition
+        rg = p.get(node, 0) if p is not None else 0
+        reachable = p is None
+        for shard in pool.replica_homes(key):
+            r = shard.objects.get(key)
+            if r is None:
+                continue
+            if node in shard.nodes:
+                return None                       # already local
+            rec = r
+            if p is not None and any(p.get(m, 0) == rg
+                                     for m in shard.nodes):
+                reachable = True
+        if rec is None or not reachable:
+            return None                           # missing / across the cut
+        cached = self.store.caches.get(node, {}).get(key)
+        if cached is not None and cached.version == rec.version:
+            return None                           # warm already
+        return rec
+
+    def _take(self, node: str, cands: Sequence[Tuple[str, ObjectRecord]],
+              speculative: bool = False) -> Optional[PrefetchPlan]:
+        """Apply the global byte cap over an ordered candidate list."""
+        keys: List[str] = []
+        versions: List[int] = []
+        sizes: List[int] = []
+        total = 0
+        for k, rec in cands:
+            if total + rec.size > self.max_bytes:
+                self.skipped_over_budget += 1
+                continue
+            keys.append(k)
+            versions.append(rec.version)
+            sizes.append(rec.size)
+            total += rec.size
         if not keys:
             return None
         self.issued += 1
         self.bytes_issued += total
-        return PrefetchPlan(node=node, keys=keys, total_bytes=total)
+        return PrefetchPlan(node=node, keys=keys, total_bytes=total,
+                            versions=versions, sizes=sizes,
+                            speculative=speculative)
+
+    # -- planners -----------------------------------------------------------
+
+    def plan_for_task(self, pool_prefix: str, label: str, node: str
+                      ) -> Optional[PrefetchPlan]:
+        """All same-affinity objects not yet cached/local at ``node``.
+
+        Candidates are gathered across every shard first and sorted by
+        key, so the byte cap is applied globally in a deterministic order
+        — shard iteration order and a large object's position can never
+        change which objects make the plan.
+        """
+        pool = self.store.pools[pool_prefix]
+        cands: List[Tuple[str, ObjectRecord]] = []
+        seen = set()
+        for shard in pool.shards.values():
+            for k, rec in shard.objects.items():
+                if rec.affinity != label or k in seen:
+                    continue
+                seen.add(k)
+                r = self._candidate(k, node)
+                if r is not None:
+                    cands.append((k, r))
+        cands.sort(key=lambda kr: kr[0])
+        return self._take(node, cands)
+
+    def plan_for_keys(self, keys: Sequence[str], node: str,
+                      speculative: bool = False) -> Optional[PrefetchPlan]:
+        """Plan an explicit key list (deduped, caller order preserved)."""
+        cands: List[Tuple[str, ObjectRecord]] = []
+        seen = set()
+        for k in keys:
+            if k in seen:
+                continue
+            seen.add(k)
+            rec = self._candidate(k, node)
+            if rec is not None:
+                cands.append((k, rec))
+        return self._take(node, cands, speculative=speculative)
 
     def execute(self, plan: PrefetchPlan) -> int:
-        """Warm the cache (the DES charges the transfer time separately)."""
+        """Warm the cache synchronously (store-level; the DES-overlapped
+        path goes through ``Simulator.prefetch`` + ``prefetch_install``
+        instead, which is what charges transfer time)."""
         moved = 0
         for k in plan.keys:
             rec, local = self.store.get(k, node=plan.node)

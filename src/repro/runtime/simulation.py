@@ -307,6 +307,18 @@ class Simulator:
         # bare callbacks (the dispatcher re-picks a node at heal)
         self._partition_parked_calls: List[Callable] = []
         self.partition_parked_dispatches = 0
+        # overlapped prefetch channel (paper §3.4): warm-up transfers
+        # share each node's NIC lanes with demand fetches / migration
+        # (so prefetch is never free), but the bytes a node may have
+        # in flight for prefetch alone are capped — excess plans queue
+        # and drain as transfers land.  (node, key) -> SimFuture lets a
+        # demand Get racing its own warm-up join the in-flight transfer
+        # instead of paying a second full fetch.
+        self.prefetch_futures: Dict[Tuple[str, str], SimFuture] = {}
+        self.prefetch_inflight_cap: int = 64 << 20
+        self._prefetch_inflight: Dict[str, int] = defaultdict(int)
+        self._prefetch_queue: Dict[str, deque] = defaultdict(deque)
+        self.prefetch_promotions = 0
         # per-op-type handler table (replaces an isinstance chain in the
         # hot path); exact-type keyed — subclassed ops resolve through
         # _handler_for, which memoizes the subclass into the table
@@ -584,6 +596,24 @@ class Simulator:
             future._waiting.append(cont)
 
     def _op_get(self, node: Node, op, cont) -> None:
+        if self.prefetch_futures:
+            fut = self.prefetch_futures.get((node.name, op.key))
+            if fut is not None and not fut.done:
+                # a warm-up transfer for exactly this key is in flight
+                # (or queued — promote it): join it rather than issuing
+                # a duplicate fetch, then re-drive the get, which will
+                # find the installed cache entry.  The resume instant is
+                # stamped so tracing bills [yield, resume] as `prefetch`.
+                self.promote_prefetch(node.name, op.key)
+
+                def rejoin(_value, node=node, op=op, cont=cont):
+                    try:
+                        op._pwait = self.now
+                    except AttributeError:
+                        pass
+                    self._op_get(node, op, cont)
+                fut._waiting.append(rejoin)
+                return
         rec, local = self.store.get(op.key, node=node.name)
         if rec is None:
             if self.partition is not None and self.store.last_get_blocked:
@@ -667,3 +697,72 @@ class Simulator:
         self.metrics["background_xfer_s"].append(dt)
         if done is not None:
             done()
+
+    # -- overlapped prefetch channel -----------------------------------------
+
+    def prefetch(self, node: Node, key: str, nbytes: int,
+                 install: Callable[[], int]) -> SimFuture:
+        """Ship ``key`` to ``node``'s cache as an overlapped NIC transfer.
+
+        ``install`` runs when the bytes land (typically
+        ``store.prefetch_install`` with the plan-time version, so stale
+        transfers become counted no-ops).  The returned future resolves
+        to the installed byte count; it carries ``blame=True`` because
+        the prefetch span is recorded explicitly by the issuer.  Bytes
+        in flight per node are capped at ``prefetch_inflight_cap`` —
+        excess entries queue FIFO and drain as transfers complete, and
+        a demand read for a queued key promotes it to the front.
+        """
+        fut = SimFuture()
+        fut.blame = True
+        self.prefetch_futures[(node.name, key)] = fut
+        entry = (node, key, nbytes, install, fut)
+        inflight = self._prefetch_inflight[node.name]
+        if inflight == 0 or inflight + nbytes <= self.prefetch_inflight_cap:
+            self._prefetch_start(entry)
+        else:
+            self._prefetch_queue[node.name].append(entry)
+        return fut
+
+    def promote_prefetch(self, node_name: str, key: str) -> None:
+        """Start a still-queued prefetch immediately (demand arrived)."""
+        q = self._prefetch_queue.get(node_name)
+        if not q:
+            return
+        for i, entry in enumerate(q):
+            if entry[1] == key:
+                del q[i]
+                self.prefetch_promotions += 1
+                self._prefetch_start(entry)
+                return
+
+    def _prefetch_start(self, entry) -> None:
+        node, key, nbytes, install, fut = entry
+        self._prefetch_inflight[node.name] += nbytes
+        dt = self.net.transfer_time(nbytes)
+
+        def start():
+            self.at(self.now + dt, self._prefetch_done, entry)
+        self.acquire(node, "nic", start)
+
+    def _prefetch_done(self, entry) -> None:
+        node, key, nbytes, install, fut = entry
+        self.release(node, "nic")
+        self._prefetch_inflight[node.name] -= nbytes
+        # drop the join point BEFORE installing/resolving: a waiter's
+        # re-driven get must see the cache entry, not re-join a done
+        # future
+        self.prefetch_futures.pop((node.name, key), None)
+        installed = install()
+        self.resolve(fut, installed)
+        self._prefetch_pump(node.name)
+
+    def _prefetch_pump(self, node_name: str) -> None:
+        q = self._prefetch_queue.get(node_name)
+        if not q:
+            return
+        inflight = self._prefetch_inflight
+        cap = self.prefetch_inflight_cap
+        while q and (inflight[node_name] == 0
+                     or inflight[node_name] + q[0][2] <= cap):
+            self._prefetch_start(q.popleft())

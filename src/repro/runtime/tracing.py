@@ -59,9 +59,13 @@ from .simulation import (BatchCompute, Compute, Get, Put, Sleep, Trigger,
 #: at a partition boundary is also covered by the coarse ingress/
 #: transfer span, and the specific cause must win the overlap — every
 #: other relative order is unchanged, so partition-free decompositions
-#: are byte-identical
-CATEGORIES = ("compute", "partition_stall", "network", "migration",
-              "recovery", "fault_stall", "retry", "queueing",
+#: are byte-identical.  ``prefetch`` sits below compute and above
+#: ``network``: time a read spent joined to an in-flight warm-up
+#: transfer is still data movement, but it is the *overlapped* kind —
+#: attributing it separately is what lets ``bench_explain`` show which
+#: network milliseconds the overlap removed.
+CATEGORIES = ("compute", "partition_stall", "prefetch", "network",
+              "migration", "recovery", "fault_stall", "retry", "queueing",
               "batch_wait", "barrier", "admission_defer", "other")
 
 _PRIORITY = {c: i for i, c in enumerate(CATEGORIES)}
@@ -358,9 +362,14 @@ class TraceRecorder:
                               f"get_wait:{op.key}", 0.0, 0))
         else:                           # plain data op: Get/Put/Trigger
             # slot 5 carries the partition-heal stamp for reads a cut
-            # parked (Simulator.heal_partition); 0.0 everywhere else
-            ps = getattr(op, "_pstall", 0.0) if kind == _GET else 0.0
-            trace.raw.extend((kind, t0, t1, node.name, op.key, ps, 0))
+            # parked (Simulator.heal_partition); slot 6 the prefetch-join
+            # resume stamp (Simulator._op_get); 0 everywhere else
+            if kind == _GET:
+                ps = getattr(op, "_pstall", 0.0)
+                pw = getattr(op, "_pwait", 0.0)
+            else:
+                ps = pw = 0.0
+            trace.raw.extend((kind, t0, t1, node.name, op.key, ps, pw))
 
     def _emit(self, trace: InstanceTrace, raw: List[Any], i: int) -> None:
         """Categorize the raw op record at ``raw[i:i+_RAW_W]`` into
@@ -417,6 +426,17 @@ class TraceRecorder:
                 cut = min(ps, t1)
                 trace.spans.append(Span("get", "partition_stall", t0,
                                         cut, nn, {"key": raw[i + 4]}))
+                self.n_spans += 1
+                t0 = cut
+            pw = raw[i + 6]
+            if pw > t0:
+                # the read joined an in-flight warm-up transfer until the
+                # resume stamp: that share is `prefetch` (overlapped data
+                # movement), the remainder the residual get — telescoping
+                # over [t0, t1] keeps decomposition exactness
+                cut = min(pw, t1)
+                trace.spans.append(Span("get", "prefetch", t0, cut, nn,
+                                        {"key": raw[i + 4]}))
                 self.n_spans += 1
                 t0 = cut
             if t1 - t0 <= self.local_cut:

@@ -5,7 +5,8 @@ from .graph import (INSTANCE, Emit, Pool, Read, Stage, Tier, WorkflowGraph,
                     WorkflowGraphError)
 from .planner import AdaptiveBatchPolicy, BatchPlanner
 from .runtime import InstanceRecord, InstanceTracker, WorkflowRuntime
-from .library import (WORKFLOW_SHAPES, index_keys, mode_kwargs,
+from .library import (WORKFLOW_SHAPES, adapter_keys, agent_workflow,
+                      index_keys, mode_kwargs, preload_adapters,
                       preload_index, rag_workflow, speech_workflow)
 
 __all__ = [
@@ -15,6 +16,7 @@ __all__ = [
     "INSTANCE", "Emit", "Pool", "Read", "Stage", "Tier", "WorkflowGraph",
     "WorkflowGraphError",
     "InstanceRecord", "InstanceTracker", "WorkflowRuntime",
-    "WORKFLOW_SHAPES", "index_keys", "mode_kwargs", "preload_index",
+    "WORKFLOW_SHAPES", "adapter_keys", "agent_workflow", "index_keys",
+    "mode_kwargs", "preload_adapters", "preload_index",
     "rag_workflow", "speech_workflow",
 ]

@@ -71,6 +71,60 @@ def preload_index(wrt, n_parts: int = INDEX_PARTS,
         wrt.preload(k, ("slab", k), size=slab_bytes)
 
 
+# agent workflow: per-instance tool adapters (LoRA-style deltas) the act
+# stage must have resident before it can run a tool call
+ADAPTER_PARTS = 2
+ADAPTER_BYTES = 4 * 1024 * 1024
+
+
+def adapter_keys(inst: str, n_parts: int = ADAPTER_PARTS):
+    """Keys of one instance's tool-adapter slabs (per-instance state)."""
+    return [workflow_key("/adapters", inst, "adapter", j)
+            for j in range(n_parts)]
+
+
+def agent_workflow(shards: int = 4, replication: int = 1,
+                   n_tools: int = 4,
+                   n_adapters: int = ADAPTER_PARTS) -> WorkflowGraph:
+    """plan -> act (x n_tools, reads per-instance adapters) -> reduce.
+
+    The shape ``benchmarks/fig14`` cold-starts: every act firing needs
+    the instance's adapter slabs resident (required reads), and the
+    reduce stage is an ``n_tools``-way fan-in over multi-MB observations
+    — so scatter placement pays adapter bytes on every tool call and
+    barrier-input bytes at the join, while admission-time prefetch can
+    overlap the former with ``plan``'s compute and speculative staging
+    the latter with the stragglers' compute.
+    """
+    g = WorkflowGraph("agent")
+    g.add_tier("agent", shards * replication,
+               {"gpu": 1, "cpu": 2, "nic": 2})
+    for prefix in ("/tasks", "/calls", "/adapters", "/obs", "/final"):
+        g.add_pool(prefix, tier="agent", shards=shards,
+                   replication=replication, affinity=INSTANCE)
+    g.add_stage("plan", pool="/tasks", resource="cpu", cost=0.003,
+                emits=[Emit("/calls", fanout=n_tools, size=512 * 1024)])
+    g.add_stage("act", pool="/calls", resource="gpu", cost=0.005,
+                reads=[Read("/adapters",
+                            keys=lambda inst: adapter_keys(inst, n_adapters),
+                            required=True)],
+                emits=[Emit("/obs", fanout=1, size=2 * 1024 * 1024)])
+    g.add_stage("reduce", pool="/obs", resource="gpu", cost=0.004,
+                join=True, emits=[Emit("/final", fanout=1, size=8192)],
+                sink=True)
+    return g.validate()
+
+
+def preload_adapters(wrt, instance: str, at: float = 0.0,
+                     n_parts: int = ADAPTER_PARTS,
+                     slab_bytes: int = ADAPTER_BYTES) -> None:
+    """Store one instance's adapter slabs (same virtual time as its
+    submit: the puts land after the admission pins, so under gang
+    placement they live on the pinned slot)."""
+    for k in adapter_keys(instance, n_parts):
+        wrt.preload(k, ("adapter", k), size=slab_bytes, at=at)
+
+
 def speech_workflow(shards: int = 4, replication: int = 1) -> WorkflowGraph:
     """asr -> {intent (gpu), diarize (cpu)} -> action (join 2)."""
     g = WorkflowGraph("speech")
@@ -99,6 +153,7 @@ def speech_workflow(shards: int = 4, replication: int = 1) -> WorkflowGraph:
 WORKFLOW_SHAPES = {
     "rag": rag_workflow,
     "speech": speech_workflow,
+    "agent": agent_workflow,
 }
 
 
@@ -111,16 +166,21 @@ def mode_kwargs(mode: str) -> dict:
     migratable pools, ``+batch`` turns on cross-instance stage batching
     with the static window (the fig8 sweep axis), ``+abatch`` turns on
     batching driven by the adaptive planner (the fig9 headline — no
-    window knob at all).  One definition so benchmarks, examples, and
-    tests sweep the exact same configurations.
+    window knob at all), ``+prefetch`` arms admission-time affinity
+    prefetch (fig14), and ``+spec`` additionally stages fan-in inputs
+    speculatively from the first barrier arrival.  One definition so
+    benchmarks, examples, and tests sweep the exact same configurations.
     """
     base, *suffixes = mode.split("+")
     if base not in ("keyhash", "affinity", "atomic") or \
-            any(s not in ("mig", "batch", "abatch") for s in suffixes):
+            any(s not in ("mig", "batch", "abatch", "prefetch", "spec")
+                for s in suffixes):
         raise ValueError(f"unknown workflow placement mode {mode!r}")
     return dict(grouped=base != "keyhash",
                 placement="load_aware" if base == "atomic" else "hash",
                 gang_pin=base == "atomic",
                 migrate_every=0.2 if "mig" in suffixes else None,
                 batching="batch" in suffixes,
-                adaptive_batching="abatch" in suffixes)
+                adaptive_batching="abatch" in suffixes,
+                prefetch="prefetch" in suffixes or "spec" in suffixes,
+                speculative="spec" in suffixes)

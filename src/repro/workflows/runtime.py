@@ -39,7 +39,8 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core import (AtomicGroupUpdate, CascadeStore, EpochFence,
                         GroupSequencer,
                         HashPlacement, InstanceAffinity,
-                        LoadAwarePlacement, RendezvousPlacement,
+                        LoadAwarePlacement, PrefetchEngine,
+                        RendezvousPlacement,
                         ReplicatedPlacement, instance_label, instance_of,
                         workflow_key)
 from repro.core.placement import PlacementPolicy
@@ -268,6 +269,10 @@ class WorkflowRuntime:
                  admission_max_defer: float = 0.2,
                  exactly_once: bool = False,
                  brownout: Optional[float] = None,
+                 prefetch: bool = False,
+                 speculative: bool = False,
+                 speculative_budget: int = 64 << 20,
+                 prefetch_budget: int = 1 << 30,
                  tracing: Any = False):
         if not graph._validated:
             graph.validate()
@@ -283,6 +288,9 @@ class WorkflowRuntime:
             "hedged execution rides the StageBatcher (batching=True)"
         assert not (exactly_once and not graph.instance_tracking), \
             "exactly_once needs an instance-tracked graph"
+        prefetch = prefetch or speculative
+        assert not (prefetch and not graph.instance_tracking), \
+            "prefetch needs an instance-tracked graph (key enumeration)"
         self.graph = graph
         self.grouped = grouped
         self.placement = placement
@@ -368,6 +376,23 @@ class WorkflowRuntime:
                           seed=seed, hedge_after=hedge_after,
                           log_tasks=log_tasks, node_profiles=profiles)
         self.store = store
+        # affinity-driven prefetch (paper §3.4): at admission the whole
+        # downstream graph and (under gang_pin) every future read's home
+        # are known, so declared-read objects ship to their predicted
+        # fire nodes as overlapped NIC transfers while upstream stages
+        # compute.  ``speculative`` additionally begins a fan-in stage's
+        # data staging at the FIRST barrier arrival, toward the predicted
+        # fire node — mispredicted bytes land in
+        # ``wasted_speculative_bytes``, and the staging gate keeps
+        # pending + wasted under ``speculative_budget`` at all times.
+        self.prefetcher: Optional[PrefetchEngine] = (
+            PrefetchEngine(store, max_bytes_per_plan=prefetch_budget)
+            if prefetch else None)
+        self.speculative = speculative and prefetch
+        self.speculative_budget = speculative_budget
+        self.wasted_speculative_bytes = 0
+        self._spec_pending: Dict[Tuple[str, str], List[Any]] = {}
+        self._spec_pending_bytes = 0
         # causal tracing + blame aggregation (``tracing`` is False, True,
         # or a TraceConfig).  The recorder observes only: enabling it
         # reproduces every latency byte-for-byte (tested).
@@ -508,7 +533,15 @@ class WorkflowRuntime:
                 if tr is not None:
                     # remember when the barrier opened (first arrival)
                     tr.marks.setdefault(("join", stage.name), ctx.now)
+                if self.speculative:
+                    # speculative fan-in staging: the barrier is still
+                    # open, but this input exists NOW — start shipping it
+                    # (and, on the first arrival, the stage's declared
+                    # reads) to the predicted fire node
+                    self._stage_speculative(inst, stage, key)
                 return                              # barrier not ready
+            if stage.join and self._spec_pending:
+                self._settle_speculative(inst, stage.name, ctx.node)
             if tr is not None and stage.join:
                 t_first = tr.marks.pop(("join", stage.name), None)
                 if t_first is not None:
@@ -632,6 +665,8 @@ class WorkflowRuntime:
         self.tracker.admit(instance, at, deadline=deadline)
         key = workflow_key(self.graph.source_pool, instance, "event", 0)
         self.rt.client_put(at, key, value, size=size)
+        if self.prefetcher is not None:
+            self.rt.sim.at(at, self._queue_prefetch, instance)
 
     def _admission_backlog(self) -> float:
         """Queue delay ahead of a fresh admission: the source pool's MEAN
@@ -728,6 +763,8 @@ class WorkflowRuntime:
             key = workflow_key(self.graph.source_pool, instance,
                                "event", 0)
             self.rt.client_put(now, key, value, size=size)
+            if self.prefetcher is not None:
+                self.rt.sim.at(now, self._queue_prefetch, instance)
             return
         if self.gang_pin:
             # roll the trial placement back completely (forget, not just
@@ -969,6 +1006,164 @@ class WorkflowRuntime:
                 self.store.invalidate_cached([key])
         self.store.stats.migrations += len(staged)
 
+    # -- affinity-driven prefetch (paper §3.4) -------------------------------
+
+    def _queue_prefetch(self, instance: str) -> None:
+        """Defer issuance past every event already queued at this virtual
+        instant: the trigger put installs its record, gang pins land, and
+        same-time preloads (per-instance adapters stored right after
+        ``submit``) become visible — so the planner sees the admission-
+        time world, not a half-built one."""
+        self.rt.sim.at(self.rt.sim.now, self._issue_prefetch, instance)
+
+    def _stage_trigger_keys(self, stage: Stage, inst: str) -> List[str]:
+        """Every key that will ever trigger ``stage`` for ``inst``, in
+        emit order.  Fully enumerable at admission: upstream firing
+        counts and fanouts are static (``validate()``), and the key
+        schema is deterministic (``workflow_key``)."""
+        out: List[str] = []
+        for u in self.graph.stages:
+            for e in u.emits:
+                if e.pool == stage.pool:
+                    for seq in range(u.firings):
+                        for i in range(e.fanout):
+                            out.append(workflow_key(
+                                e.pool, inst, f"{u.name}{seq}", i))
+        if not out and stage.pool == self.graph.source_pool:
+            out.append(workflow_key(stage.pool, inst, "event", 0))
+        return out
+
+    def _home_node(self, key: str) -> Optional[str]:
+        """The node a task triggered by ``key`` will run on: first up
+        member of the key's home shard (exactly the
+        ``ShardLocalScheduler`` pick at replication 1; an approximation
+        — costing only warm-up precision, never correctness — beyond)."""
+        shard = self.store.pool_for(key).home(key)
+        rt_nodes = self.rt.nodes
+        for n in shard.nodes:
+            if rt_nodes[n].up:
+                return n
+        return shard.nodes[0] if shard.nodes else None
+
+    def _predict_fire_node(self, stage: Stage, inst: str) -> Optional[str]:
+        """Predicted fire node of a join stage: the barrier fires where
+        its LAST arrival lands, and with same-sized emits delivered FIFO
+        the last-enumerated trigger key is the one that arrives last.  A
+        misprediction costs counted speculative bytes, never
+        correctness."""
+        keys = self._stage_trigger_keys(stage, inst)
+        return self._home_node(keys[-1]) if keys else None
+
+    def _issue_prefetch(self, instance: str) -> None:
+        """Admission-time plan flow (the tentpole): for every downstream
+        synthesized stage, ship its declared-read objects to the node(s)
+        the stage will fire on, as overlapped NIC transfers issued while
+        the upstream stages compute.  Join INPUTS do not exist yet and
+        are skipped by the planner; the speculative path handles them as
+        they materialize."""
+        if instance not in self.tracker.records:
+            return                       # rejected / already retired
+        per_node: Dict[str, List[str]] = {}
+        for stage in self.graph.stages:
+            if stage.body is not None or not stage.reads:
+                continue
+            read_keys = [k for r in stage.reads for k in r.keys(instance)]
+            if not read_keys:
+                continue
+            if stage.join:
+                nodes = [self._predict_fire_node(stage, instance)]
+            else:
+                seen: set = set()
+                nodes = []
+                for k in self._stage_trigger_keys(stage, instance):
+                    n = self._home_node(k)
+                    if n is not None and n not in seen:
+                        seen.add(n)
+                        nodes.append(n)
+            for n in nodes:
+                if n is not None:
+                    per_node.setdefault(n, []).extend(read_keys)
+        sim = self.rt.sim
+        for node_name, keys in per_node.items():
+            fresh = [k for k in keys
+                     if (node_name, k) not in sim.prefetch_futures]
+            if not fresh:
+                continue
+            plan = self.prefetcher.plan_for_keys(fresh, node_name)
+            if plan is not None:
+                self._issue_plan(instance, plan)
+
+    def _stage_speculative(self, inst: str, stage: Stage,
+                           key: str) -> None:
+        """Ship one early barrier arrival (plus, on the first call, the
+        stage's declared reads) toward the predicted fire node, within
+        the wasted-bytes budget."""
+        pend = self._spec_pending.get((inst, stage.name))
+        if pend is None:
+            node = self._predict_fire_node(stage, inst)
+            if node is None:
+                return
+            pend = self._spec_pending[(inst, stage.name)] = [node, 0]
+            keys = [k for r in stage.reads for k in r.keys(inst)]
+            keys.append(key)
+        else:
+            node = pend[0]
+            keys = [key]
+        sim = self.rt.sim
+        keys = [k for k in keys
+                if (node, k) not in sim.prefetch_futures]
+        if not keys:
+            return
+        # hard bound: pending + wasted never exceed the budget, so the
+        # bytes that can ever turn out wasted are bounded by construction
+        remaining = (self.speculative_budget
+                     - self.wasted_speculative_bytes
+                     - self._spec_pending_bytes)
+        if remaining <= 0:
+            return
+        eng = self.prefetcher
+        cap, eng.max_bytes = eng.max_bytes, min(eng.max_bytes, remaining)
+        try:
+            plan = eng.plan_for_keys(keys, node, speculative=True)
+        finally:
+            eng.max_bytes = cap
+        if plan is None:
+            return
+        pend[1] += plan.total_bytes
+        self._spec_pending_bytes += plan.total_bytes
+        self._issue_plan(inst, plan)
+
+    def _settle_speculative(self, inst: str, stage_name: str,
+                            fire_node: str) -> None:
+        """The barrier fired: bytes staged to the right node were useful
+        (the fire path's gets hit them); bytes staged anywhere else are
+        charged to ``wasted_speculative_bytes``."""
+        pend = self._spec_pending.pop((inst, stage_name), None)
+        if pend is None:
+            return
+        self._spec_pending_bytes -= pend[1]
+        if pend[0] != fire_node:
+            self.wasted_speculative_bytes += pend[1]
+
+    def _issue_plan(self, instance: str, plan) -> None:
+        """Hand a plan's keys to the DES prefetch channel, version-
+        stamped so a racing write/migration voids the install instead of
+        caching stale data.  Traced instances get one ``prefetch`` span
+        per landed transfer ([issue, install] — the overlapped window)."""
+        sim = self.rt.sim
+        node = self.rt.nodes[plan.node]
+        tr = (self.tracer.live.get(instance)
+              if self.tracer is not None else None)
+        t0 = sim.now
+        for k, ver, sz in zip(plan.keys, plan.versions, plan.sizes):
+            def install(nn=plan.node, key=k, ver=ver, t0=t0, tr=tr):
+                n = self.store.prefetch_install(nn, key, ver)
+                if tr is not None and n and sim.now > t0:
+                    self.tracer.span(tr, "prefetch", f"prefetch:{key}",
+                                     t0, sim.now, nn)
+                return n
+            sim.prefetch(node, k, sz, install)
+
     # -- gang placement -----------------------------------------------------
 
     def _slot_unadmittable(self, pool, sname: str) -> bool:
@@ -1045,6 +1240,20 @@ class WorkflowRuntime:
                 out["partition_parked_dispatches"] = \
                     self.rt.sim.partition_parked_dispatches
             out["fence_rejected"] = self.fence.rejected
+        if self.prefetcher is not None:
+            st = self.store.stats
+            out["prefetch_issued"] = self.prefetcher.issued
+            out["prefetch_bytes_issued"] = self.prefetcher.bytes_issued
+            out["prefetch_installs"] = st.prefetch_installs
+            out["prefetch_stale"] = st.prefetch_stale
+            out["prefetch_hits"] = st.prefetch_hits
+            out["bytes_prefetched"] = st.bytes_prefetched
+            out["prefetch_promotions"] = self.rt.sim.prefetch_promotions
+            out["prefetch_skipped_over_budget"] = \
+                self.prefetcher.skipped_over_budget
+            if self.speculative:
+                out["wasted_speculative_bytes"] = \
+                    self.wasted_speculative_bytes
         if self.brownout is not None:
             out["brownout_engagements"] = self.brownout_engagements
             out["degraded_firings"] = self.degraded_firings

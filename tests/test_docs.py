@@ -18,6 +18,7 @@ BATCHING_DOC = DOCS / "batching.md"
 ELASTICITY_DOC = DOCS / "elasticity.md"
 FAULTS_DOC = DOCS / "faults.md"
 OBSERVABILITY_DOC = DOCS / "observability.md"
+PREFETCH_DOC = DOCS / "prefetch.md"
 
 
 def fenced_python_blocks(text: str):
@@ -55,11 +56,13 @@ def test_docs_exist():
     assert ELASTICITY_DOC.exists()
     assert FAULTS_DOC.exists()
     assert OBSERVABILITY_DOC.exists()
+    assert PREFETCH_DOC.exists()
 
 
 @pytest.mark.parametrize("doc", [API_DOC, ARCH_DOC, WORKFLOWS_DOC,
                                  BATCHING_DOC, ELASTICITY_DOC,
-                                 FAULTS_DOC, OBSERVABILITY_DOC])
+                                 FAULTS_DOC, OBSERVABILITY_DOC,
+                                 PREFETCH_DOC])
 def test_all_qualified_names_resolve(doc):
     names = qualified_names(doc.read_text())
     assert names, f"{doc.name} should document qualified repro.* symbols"
@@ -76,7 +79,7 @@ def test_all_qualified_names_resolve(doc):
     "doc_idx_snippet",
     [(doc, i, snip) for doc in (API_DOC, WORKFLOWS_DOC, BATCHING_DOC,
                                 ELASTICITY_DOC, FAULTS_DOC,
-                                OBSERVABILITY_DOC)
+                                OBSERVABILITY_DOC, PREFETCH_DOC)
      for i, snip in enumerate(fenced_python_blocks(doc.read_text()))],
     ids=lambda p: f"{p[0].stem}-snippet{p[1]}")
 def test_doc_snippets_run(doc_idx_snippet):

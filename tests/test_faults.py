@@ -486,7 +486,8 @@ def _chaos_trial(rng):
     schedule, then the accounting invariants that must hold regardless —
     no instance lost or duplicated, admitted = completed + rejected, and
     the gang equal-slot invariant after every re-pin."""
-    from repro.workflows import WORKFLOW_SHAPES, preload_index
+    from repro.workflows import (WORKFLOW_SHAPES, preload_adapters,
+                                 preload_index)
 
     shape = rng.choice(sorted(WORKFLOW_SHAPES))
     shards = rng.randint(2, 3)
@@ -557,6 +558,10 @@ def _chaos_trial(rng):
     deadline = 1.0 if admission else None
     for i in range(n_inst):
         wrt.submit(f"i{i}", at=0.001 + i / rate, deadline=deadline)
+        if shape == "agent":
+            # the act stage's required adapter reads (same virtual time
+            # as the submit, so gang pins place them)
+            preload_adapters(wrt, f"i{i}", at=0.001 + i / rate)
     n_dups = 0
     if exactly_once and admission is None:
         # duplicated trigger deliveries (client retries / replays): the
